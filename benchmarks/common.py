@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: timing, FLOP counting, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+# TPU v5e hardware constants (targets; this host is CPU so wall-times are
+# CPU-measured and labeled as such — roofline projections use these).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_BW = 50e9                     # B/s per link
+
+ROWS = []
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-clock μs per call (jit'd fn; blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def compiled_flops(fn: Callable, *args) -> float:
+    """HLO FLOPs of fn(*args) from XLA cost analysis."""
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", -1.0))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,43 @@
+"""Pallas block-circulant kernel: correctness-at-shape sweep + VMEM budget.
+
+Wall-times here run the kernel in INTERPRET mode (no TPU in this
+container) and are labeled as such — the meaningful outputs are the
+rel-error vs the dense oracle, the chosen tile sizes, and the VMEM
+working-set estimate per tile (must be < 16 MB v5e VMEM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.block_circulant import block_circulant_matmul
+from repro.kernels.block_circulant.kernel import choose_blocks
+from repro.kernels.block_circulant.ref import block_circulant_matmul_ref
+
+
+def run():
+    for (B, p, q, k) in [(128, 8, 8, 128), (256, 24, 8, 128),
+                         (64, 32, 32, 16), (512, 4, 4, 64)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, q * k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (p, q, k), jnp.float32)
+        y = block_circulant_matmul(x, w)
+        y_ref = block_circulant_matmul_ref(x, w)
+        rel = float(jnp.max(jnp.abs(y - y_ref)) /
+                    jnp.max(jnp.abs(y_ref)))
+        bB, pt, qt = choose_blocks(B, p, q, k)
+        K = k // 2 + 1
+        vmem = (2 * (bB * qt * k * 4 + 2 * pt * qt * K * 4)
+                + 2 * bB * pt * K * 4 + bB * pt * k * 4
+                + 2 * k * K * 4 + 2 * K * k * 4)
+        us = time_fn(lambda x, w: block_circulant_matmul(x, w), x, w,
+                     iters=3, warmup=1)
+        emit(f"kernel/bc_B{B}_p{p}_q{q}_k{k}", us,
+             f"relerr={rel:.2e};tiles=({bB},{pt},{qt});"
+             f"vmem_bytes={vmem};vmem_ok={vmem < 16*2**20};interpret=True")
+
+
+if __name__ == "__main__":
+    run()

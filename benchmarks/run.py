@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV rows. CPU-measured wall-times are
+labeled; roofline-derived numbers for the production cells live in
+EXPERIMENTS.md (fed by launch/dryrun.py + launch/roofline.py).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (complexity_scaling, compression_accuracy,
+                            kernel_bench, table1_dcnn, table1_lstm,
+                            table2_asic)
+
+    print("name,us_per_call,derived")
+    mods = [
+        ("table1_dcnn", table1_dcnn),
+        ("table1_lstm", table1_lstm),
+        ("table2_asic", table2_asic),
+        ("compression_accuracy", compression_accuracy),
+        ("complexity_scaling", complexity_scaling),
+        ("kernel_bench", kernel_bench),
+    ]
+    failures = []
+    for name, mod in mods:
+        try:
+            mod.run()
+        except Exception as e:                      # keep the harness going
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {[n for n, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

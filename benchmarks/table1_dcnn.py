@@ -1,0 +1,79 @@
+"""Table 1 (DCNN rows): SWM vs dense throughput/energy on the paper's nets.
+
+The paper reports kFPS and kFPS/W on a CyClone V FPGA vs IBM TrueNorth for
+MNIST MLPs, a LeNet-like CNN, SVHN and CIFAR-10 nets. We reproduce the
+*system-level quantities we can measure here*: images/s (CPU-measured,
+labeled), FLOPs/image (compiled), parameter compression, and a TPU-v5e
+roofline projection (FLOPs / peak). Paper numbers are quoted inline for
+reference.
+
+Paper reference rows (Table 1):
+  Proposed MNIST 1  (MLP)     92.9%   8.6e4 kFPS   1.57e5 kFPS/W
+  Proposed MNIST 2  (MLP)     95.6%   2.9e4 kFPS   5.2e4  kFPS/W
+  Proposed MNIST 3  (LeNet)   99.0%   363  kFPS    659.5  kFPS/W
+  Proposed SVHN               96.2%   384.9 kFPS   699.7  kFPS/W
+  Proposed CIFAR-10 1         80.3%   1383 kFPS    2514   kFPS/W
+  TrueNorth MNIST             95%     1.0  kFPS    250    kFPS/W
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PEAK_FLOPS_BF16, compiled_flops, emit, time_fn
+from repro.models.paper_models import SWMCNN, SWMMLP
+from repro.nn.module import init_params, param_count
+
+
+def _bench_net(name, model, x, dense_model=None):
+    params = init_params(model.specs(), 0)
+    fn = jax.jit(lambda p, x: model(p, x))
+    us = time_fn(fn, params, x)
+    B = x.shape[0]
+    fl = compiled_flops(lambda p, x: model(p, x), params, x)
+    n_params = param_count(model.specs())
+    img_s = B / (us / 1e6)
+    # TPU v5e projection: FLOP-bound images/s at 50% peak utilization
+    tpu_img_s = 0.5 * PEAK_FLOPS_BF16 / max(fl / B, 1)
+    derived = (f"images_s_cpu={img_s:.0f};flops_per_img={fl/B:.3e};"
+               f"params={n_params};tpu_v5e_proj_kfps={tpu_img_s/1e3:.0f}")
+    if dense_model is not None:
+        dp = init_params(dense_model.specs(), 0)
+        dus = time_fn(jax.jit(lambda p, x: dense_model(p, x)), dp, x)
+        dn = param_count(dense_model.specs())
+        derived += (f";speedup_vs_dense={dus/us:.2f}x"
+                    f";compression={dn/n_params:.1f}x")
+    emit(name, us, derived)
+
+
+def run():
+    B = 64
+    x_mlp = jax.random.normal(jax.random.PRNGKey(0), (B, 784))
+    # MNIST 1/2: MLPs (paper's 92.9% / 95.6% rows), k=64 vs dense
+    _bench_net(
+        "table1/mnist_mlp_swm_k64",
+        SWMMLP(dims=(784, 512, 512, 10), block_size=64, quant_bits=12),
+        x_mlp,
+        dense_model=SWMMLP(dims=(784, 512, 512, 10), block_size=0),
+    )
+    # MNIST 3: LeNet-like CNN (99.0% row)
+    x_img = jax.random.normal(jax.random.PRNGKey(1), (8, 28, 28, 1))
+    _bench_net(
+        "table1/mnist_cnn_swm",
+        SWMCNN(),
+        x_img,
+        dense_model=SWMCNN(conv_block=1, fc_block=0),
+    )
+    # SVHN / CIFAR-10-1: wider MLP-ish stand-ins at the paper's scale
+    x32 = jax.random.normal(jax.random.PRNGKey(2), (B, 3072))
+    _bench_net(
+        "table1/cifar10_swm_k64",
+        SWMMLP(dims=(3072, 1024, 1024, 10), block_size=64, quant_bits=12),
+        x32,
+        dense_model=SWMMLP(dims=(3072, 1024, 1024, 10), block_size=0),
+    )
+
+
+if __name__ == "__main__":
+    run()

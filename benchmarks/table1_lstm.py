@@ -1,0 +1,48 @@
+"""Table 1 (LSTM rows): SWM-LSTM (FFT8/FFT16) vs dense Google-LSTM vs ESE.
+
+Paper claims: block size 16 → 14.6× model-size reduction, ~3.7× compute
+reduction, 1.23% PER degradation; block size 8 → 7.6× / 2.6× / 0.32%.
+vs ESE: up to 21× performance, 33.5× energy efficiency.
+
+We measure: μs/frame (CPU), FLOPs/frame (compiled), parameter reduction —
+and check the paper's compute/storage reduction ratios directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compiled_flops, emit, time_fn
+from repro.models.paper_models import SWMLSTMASR
+from repro.nn.module import init_params, param_count
+
+
+def run():
+    B, T = 4, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, T, 153))
+    dense = SWMLSTMASR(block_size=0)
+    nd = param_count(dense.specs())
+    fd = None
+    base_us = None
+    for k, name in [(0, "dense"), (8, "fft8_lstm2"), (16, "fft16_lstm1")]:
+        model = SWMLSTMASR(block_size=k)
+        params = init_params(model.specs(), 0)
+        fn = jax.jit(lambda p, x, m=model: m(p, x))
+        us = time_fn(fn, params, x, iters=5, warmup=2)
+        fl = compiled_flops(lambda p, x, m=model: m(p, x), params, x)
+        np_ = param_count(model.specs())
+        if k == 0:
+            fd, base_us = fl, us
+            derived = f"flops_per_frame={fl/(B*T):.3e};params={np_}"
+        else:
+            derived = (f"flops_per_frame={fl/(B*T):.3e};params={np_};"
+                       f"size_reduction={nd/np_:.1f}x;"
+                       f"flop_reduction={fd/fl:.2f}x;"
+                       f"paper_claim_size={'7.6x' if k==8 else '14.6x'};"
+                       f"paper_claim_flops={'2.6x' if k==8 else '3.7x'}")
+        emit(f"table1/lstm_{name}", us, derived)
+
+
+if __name__ == "__main__":
+    run()

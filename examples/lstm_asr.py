@@ -1,0 +1,60 @@
+"""Paper §6.1 LSTM end-to-end: train the SWM-LSTM (Google-LSTM geometry,
+TIMIT-like synthetic frames) at FFT8/FFT16 block sizes; report per-frame
+accuracy (proxy for 1-PER) and model-size reduction vs the dense LSTM.
+
+    PYTHONPATH=src python examples/lstm_asr.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import synthetic_speech
+from repro.models.paper_models import SWMLSTMASR
+from repro.nn.module import init_params, param_count
+from repro.optim.optimizers import adamw_init, adamw_update
+
+
+def train_one(block_size: int, steps: int = 250):
+    model = SWMLSTMASR(d_cell=256, d_proj=128, block_size=block_size)
+    tcfg = TrainConfig(learning_rate=8e-3, warmup_steps=10, total_steps=steps,
+                       weight_decay=0.0)
+    params = init_params(model.specs(), 0)
+    opt = adamw_init(params, tcfg)
+
+    @jax.jit
+    def step(params, opt, i, x, y):
+        def loss(p):
+            lp = jax.nn.log_softmax(model(p, x))
+            return -jnp.take_along_axis(lp, y[..., None], -1).mean()
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, i, tcfg)
+        return params, opt, l
+
+    B, T = 16, 24
+    for i in range(steps):
+        x, y = synthetic_speech(B, T, 153, i)
+        params, opt, l = step(params, opt, jnp.asarray(i), jnp.asarray(x),
+                              jnp.asarray(y))
+    hits = tot = 0
+    for i in range(500, 504):
+        x, y = synthetic_speech(B, T, 153, i)
+        pred = np.asarray(jnp.argmax(model(params, jnp.asarray(x)), -1))
+        hits += (pred == y).sum(); tot += y.size
+    return hits / tot, param_count(model.specs())
+
+
+def main():
+    print(f"{'variant':>14} {'frame_acc':>10} {'params':>10} {'reduction':>10}")
+    base = None
+    for k, name in ((0, "dense"), (8, "FFT8/LSTM2"), (16, "FFT16/LSTM1")):
+        acc, n = train_one(k)
+        base = base or n
+        print(f"{name:>14} {acc:10.4f} {n:10,} {base/n:9.1f}x")
+    print("\n(paper: FFT8 → 7.6x size cut at 0.32% PER loss; "
+          "FFT16 → 14.6x at 1.23%)")
+
+
+if __name__ == "__main__":
+    main()

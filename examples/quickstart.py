@@ -1,0 +1,51 @@
+"""Quickstart: train a small SWM (block-circulant) language model.
+
+Shows the three-line story of the paper's technique inside this framework:
+set ``swm.block_size=k`` on any config and every projection becomes a
+circulant block table — k× less storage, ~k/4× less compute — trained with
+the ordinary AdamW loop.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs.base import ModelConfig, SWMConfig, TrainConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.specs import count_params
+from repro.models.decoder import HybridDecoderLM
+from repro.nn.module import init_params, param_count
+from repro.train.loop import init_train_state, make_train_step
+
+
+def main():
+    cfg = ModelConfig(
+        name="quickstart-swm-lm",
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=512, vocab=512,
+        swm=SWMConfig(block_size=16, impl="dft"),   # <-- the paper, one line
+        remat="none", param_dtype="float32", compute_dtype="float32",
+    )
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=20, total_steps=200,
+                       z_loss=0.0)
+    model = HybridDecoderLM(cfg)
+    counts = count_params(cfg)
+    print(f"params: {counts['stored']:,} stored "
+          f"({counts['dense']:,} dense-equivalent → "
+          f"{counts['compression']:.1f}x compression)")
+
+    params = init_params(model.specs(), seed=0)
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(model, cfg, tcfg), donate_argnums=0)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, batch=16)
+
+    for s in range(200):
+        state, metrics = step(state, data.batch_jax(s))
+        if s % 25 == 0 or s == 199:
+            print(f"step {s:4d}  loss {float(metrics['loss']):8.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):7.3f}")
+    print("done — loss should have dropped by >2 nats.")
+
+
+if __name__ == "__main__":
+    main()

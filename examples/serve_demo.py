@@ -1,0 +1,49 @@
+"""Serving demo: train a tiny SWM LM briefly, then serve batched requests
+through the continuous-batching engine (prefill → greedy decode).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs.base import ModelConfig, SWMConfig, TrainConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models.decoder import HybridDecoderLM
+from repro.nn.module import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.train.loop import init_train_state, make_train_step
+
+
+def main():
+    cfg = ModelConfig(
+        name="serve-demo", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=128,
+        swm=SWMConfig(block_size=8, impl="dft"),
+        remat="none", param_dtype="float32", compute_dtype="float32",
+    )
+    tcfg = TrainConfig(learning_rate=5e-3, warmup_steps=10, total_steps=120,
+                       z_loss=0.0)
+    model = HybridDecoderLM(cfg)
+    state = init_train_state(init_params(model.specs(), 0), tcfg)
+    step = jax.jit(make_train_step(model, cfg, tcfg), donate_argnums=0)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=48, batch=16)
+    for s in range(120):
+        state, metrics = step(state, data.batch_jax(s))
+    print(f"trained 120 steps, final loss {float(metrics['loss']):.3f}")
+
+    engine = ServeEngine(model, cfg, state["params"], batch=4, cache_len=64)
+    # prompts drawn from the training distribution: the model should
+    # continue the +1..+6 drift pattern it learned
+    prompts = [np.array([5, 9, 14, 18, 21], np.int32),
+               np.array([100, 104, 107], np.int32),
+               np.array([50, 53], np.int32),
+               np.array([7, 11, 16, 19, 25, 28], np.int32),
+               np.array([64, 70, 75], np.int32)]
+    outs = engine.generate([Request(p, max_new=8) for p in prompts])
+    for p, o in zip(prompts, outs):
+        print(f"prompt {list(p)} -> {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper §4.2/§6.1 end-to-end: train the paper's MNIST MLP with SWM
+compression at several block sizes and compare accuracy vs model size —
+the accuracy/compression trade-off curve that motivates the whole paper.
+
+    PYTHONPATH=src python examples/train_mnist_swm.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import synthetic_images
+from repro.models.paper_models import SWMMLP
+from repro.nn.module import init_params, param_count
+from repro.optim.optimizers import adamw_init, adamw_update
+
+
+def train_one(k: int, steps: int = 200) -> tuple:
+    model = SWMMLP(dims=(784, 256, 256, 10), block_size=k,
+                   quant_bits=12 if k else 0)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=10,
+                       total_steps=steps, weight_decay=0.0)
+    params = init_params(model.specs(), 0)
+    opt = adamw_init(params, tcfg)
+
+    @jax.jit
+    def step(params, opt, i, x, y):
+        def loss(p):
+            lp = jax.nn.log_softmax(model(p, x))
+            return -jnp.take_along_axis(lp, y[:, None], 1).mean()
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, i, tcfg)
+        return params, opt, l
+
+    for i in range(steps):
+        x, y = synthetic_images(128, i)
+        params, opt, l = step(params, opt, jnp.asarray(i),
+                              jnp.asarray(x.reshape(128, -1)), jnp.asarray(y))
+    correct = total = 0
+    for i in range(1000, 1010):
+        x, y = synthetic_images(128, i)
+        pred = np.asarray(jnp.argmax(
+            model(params, jnp.asarray(x.reshape(128, -1))), -1))
+        correct += (pred == y).sum()
+        total += len(y)
+    return correct / total, param_count(model.specs())
+
+
+def main():
+    print(f"{'block size':>12} {'accuracy':>9} {'params':>9} {'reduction':>10}")
+    base = None
+    for k in (0, 2, 4, 8, 16):
+        acc, n = train_one(k)
+        base = base or n
+        print(f"{k or 'dense':>12} {acc:9.4f} {n:9,} {base/n:9.1f}x")
+    print("\n(the paper reports <2% accuracy loss at 400×+ FC-layer "
+          "compression on real MNIST; synthetic data shown here)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128 experts top-2 + dense residual FFN in parallel.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+Dense-baseline note: 480B params with AdamW-f32 moments does NOT fit 256
+v5e chips (476B·10B ≈ 4.8TB > 4.1TB fleet HBM); the config therefore uses
+FSDP (params over data×model) + bf16 moments. With the paper's SWM (k=128)
+the expert weights shrink 128× and the whole problem fits trivially — this
+arch is the strongest demonstration of the paper's storage claim.
+"""
+
+from repro.configs.base import ModelConfig, SWMConfig, TrainConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="lm",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab=32000,
+    n_experts=128,
+    n_experts_per_token=2,
+    d_ff_expert=4864,
+    moe_every=1,
+    dense_residual_ffn=True,
+    capacity_factor=1.25,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    swm=SWMConfig(block_size=128, impl="paper"),
+    fsdp=True,
+    remat="block",
+)
+
+SMOKE = ModelConfig(
+    name="arctic-smoke",
+    family="lm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab=256,
+    n_experts=8,
+    n_experts_per_token=2,
+    d_ff_expert=96,
+    dense_residual_ffn=True,
+    tie_embeddings=False,
+    swm=SWMConfig(block_size=8, impl="paper"),
+    remat="none",
+    param_dtype="float32",
+    compute_dtype="float32",
+)

@@ -1,0 +1,3 @@
+# Subpackages import lazily to avoid core <-> nn import cycles
+# (nn.linear depends on core.circulant; core.lstm depends on nn.linear).
+from repro.core import circulant, quant

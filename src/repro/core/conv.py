@@ -1,0 +1,77 @@
+"""Block-circulant CONV layer (paper §3, CirCNN [5]).
+
+The CONV tensor F ∈ R^{r×r×C×P} is made block-circulant over the channel
+dims: for every spatial tap (i, j), the C×P matrix F(i,j,·,·) is partitioned
+into k×k circulant blocks. The layer is computed as an im2col GEMM whose
+weight is block-circulant over channels — one fused frequency-domain
+contraction across (taps × input-channel blocks):
+
+    ŷ[n, p, f] = Σ_{t, j} ŵ[t, p, j, f] ∘ x̂[n, t, j, f]
+
+Storage: r²·C·P/k instead of r²·C·P. Compute: r²·(C/k)·(P/k)·O(k log k)·HW.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamSpec
+
+__all__ = ["CirculantConv2D"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CirculantConv2D:
+    in_ch: int
+    out_ch: int
+    ksize: int = 3
+    block_size: int = 1          # k; 1 = dense conv
+    dtype: str = "float32"
+
+    @property
+    def k(self) -> int:
+        from repro.core.circulant import valid_block_size
+
+        if self.block_size <= 1:
+            return 1
+        return valid_block_size(self.block_size, self.in_ch, self.out_ch)
+
+    def specs(self):
+        r, C, P, k = self.ksize, self.in_ch, self.out_ch, self.k
+        if k > 1:
+            w = ParamSpec((r * r, P // k, C // k, k), jnp.dtype(self.dtype),
+                          (None, None, None, None), init="normal",
+                          scale=(r * r * C) ** -0.5)
+        else:
+            w = ParamSpec((r * r, C, P), jnp.dtype(self.dtype),
+                          (None, None, None), init="normal",
+                          scale=(r * r * C) ** -0.5)
+        return {"w": w, "b": ParamSpec((P,), jnp.float32, (None,),
+                                       init="zeros")}
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        """x (B, H, W, C) -> (B, H-r+1, W-r+1, P), VALID padding."""
+        r, C, P, k = self.ksize, self.in_ch, self.out_ch, self.k
+        B, H, W, _ = x.shape
+        Ho, Wo = H - r + 1, W - r + 1
+        # im2col: (B, Ho, Wo, r*r, C)
+        patches = jnp.stack(
+            [x[:, i : i + Ho, j : j + Wo, :] for i in range(r) for j in range(r)],
+            axis=3,
+        )
+        w = params["w"]
+        if k == 1:
+            y = jnp.einsum("bhwtc,tcp->bhwp", patches, w.astype(x.dtype))
+        else:
+            q = C // k
+            xb = patches.reshape(B, Ho, Wo, r * r, q, k)
+            xh = jnp.fft.rfft(xb.astype(jnp.float32), axis=-1)
+            wh = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)  # (t, p, q, K)
+            yh = jnp.einsum("bhwtqf,tpqf->bhwpf", xh, wh)
+            y = jnp.fft.irfft(yh, n=k, axis=-1).reshape(B, Ho, Wo, P)
+            y = y.astype(x.dtype)
+        return y + params["b"].astype(y.dtype)

@@ -1,0 +1,80 @@
+"""SWM-LSTM — the paper's LSTM (§2.2 eq. 1a–1g) with block-circulant weights.
+
+Google-LSTM architecture [35]: gates from x_t and the *projected* recurrent
+output y_{t-1}; diagonal peephole connections W_ic/W_fc/W_oc (element-wise,
+never circulant — they are already O(n)); projection W_ym to d_proj.
+
+All eight gate matrices and the projection are block-circulant with block
+size k (paper §6.1: FFT8 → 0.32% PER loss, FFT16 → 1.23%).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SWMConfig
+from repro.nn.linear import Linear
+from repro.nn.module import ParamSpec
+
+__all__ = ["SWMLSTM"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SWMLSTM:
+    d_in: int
+    d_cell: int
+    d_proj: int
+    swm: SWMConfig = dataclasses.field(default_factory=SWMConfig)
+    dtype: str = "float32"
+
+    def _lin(self, i, o):
+        return Linear(in_dim=i, out_dim=o, in_axis=None, out_axis=None,
+                      family="lstm", swm=self.swm, dtype=self.dtype)
+
+    def specs(self):
+        di, dc, dp = self.d_in, self.d_cell, self.d_proj
+        f32 = jnp.float32
+        s = {}
+        for g in ("i", "f", "c", "o"):
+            s[f"W{g}x"] = self._lin(di, dc).specs()
+            s[f"W{g}r"] = self._lin(dp, dc).specs()
+            s[f"b{g}"] = ParamSpec((dc,), f32, (None,), init="zeros")
+        for g in ("i", "f", "o"):     # diagonal peepholes
+            s[f"W{g}c"] = ParamSpec((dc,), f32, (None,), init="zeros")
+        s["Wym"] = self._lin(dc, dp).specs()
+        return s
+
+    def step(self, params, x_t, y_prev, c_prev):
+        """One LSTM step (eq. 1a–1g). Shapes: x (B,di), y (B,dp), c (B,dc)."""
+        lin_x = lambda g: self._lin(self.d_in, self.d_cell)(params[f"W{g}x"], x_t)
+        lin_r = lambda g: self._lin(self.d_proj, self.d_cell)(params[f"W{g}r"], y_prev)
+        i = jax.nn.sigmoid(lin_x("i") + lin_r("i") + params["Wic"] * c_prev + params["bi"])
+        f = jax.nn.sigmoid(lin_x("f") + lin_r("f") + params["Wfc"] * c_prev + params["bf"])
+        g = jax.nn.sigmoid(lin_x("c") + lin_r("c") + params["bc"])
+        c = f * c_prev + g * i
+        o = jax.nn.sigmoid(lin_x("o") + lin_r("o") + params["Woc"] * c + params["bo"])
+        m = o * jnp.tanh(c)
+        y = self._lin(self.d_cell, self.d_proj)(params["Wym"], m)
+        return y, c
+
+    def __call__(self, params, xs: jax.Array,
+                 state: Optional[Tuple[jax.Array, jax.Array]] = None):
+        """xs (B, T, di) -> ys (B, T, dp); scan over time."""
+        B = xs.shape[0]
+        if state is None:
+            y0 = jnp.zeros((B, self.d_proj), xs.dtype)
+            c0 = jnp.zeros((B, self.d_cell), jnp.float32)
+        else:
+            y0, c0 = state
+
+        def body(carry, x_t):
+            y, c = carry
+            y, c = self.step(params, x_t, y, c.astype(jnp.float32))
+            return (y, c), y
+
+        (yT, cT), ys = jax.lax.scan(body, (y0, c0), jnp.moveaxis(xs, 1, 0))
+        return jnp.moveaxis(ys, 0, 1), (yT, cT)

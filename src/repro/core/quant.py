@@ -1,0 +1,48 @@
+"""Fixed-point quantization simulation (paper §4.1).
+
+The paper uses 12-bit (DCNN) / 16-bit (LSTM) fixed point for weights and
+activations, verified with a bit-wise C++ simulator. TPUs have no 12-bit
+datapath, so we *simulate*: fake-quantize to (bits, frac_bits) fixed point
+with a straight-through estimator so the accuracy benchmarks (§4.2
+reproduction) can sweep bit widths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fixed_point", "quantize_tree"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fixed_point(x: jax.Array, bits: int = 12, frac_bits: int = 8) -> jax.Array:
+    """Round to signed (bits).(frac_bits) fixed point; STE gradient."""
+    scale = float(2**frac_bits)
+    lo = -(2 ** (bits - 1)) / scale
+    hi = (2 ** (bits - 1) - 1) / scale
+    q = jnp.round(x.astype(jnp.float32) * scale) / scale
+    return jnp.clip(q, lo, hi).astype(x.dtype)
+
+
+def _fq_fwd(x, bits, frac_bits):
+    return fixed_point(x, bits, frac_bits), None
+
+
+def _fq_bwd(bits, frac_bits, _, g):
+    return (g,)
+
+
+fixed_point.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantize_tree(params, bits: int = 12, frac_bits: int = 8):
+    """Fake-quantize every floating leaf of a param tree."""
+    def q(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return fixed_point(x, bits, frac_bits)
+        return x
+
+    return jax.tree.map(q, params)

@@ -1,0 +1,148 @@
+"""Fault-tolerant training driver: auto-restart, straggler watchdog, elastic.
+
+``TrainDriver.run`` wraps the jitted train_step in a supervisor loop:
+
+  * periodic async checkpoints (tcfg.checkpoint_every);
+  * on a step failure (device error, injected fault, preemption signal) it
+    restores the latest checkpoint and resumes — steps are idempotent
+    because the data pipeline is keyed by step number;
+  * a straggler watchdog tracks per-step wall time with an EWMA; steps
+    slower than ``mean + straggler_k·std`` are logged, and after
+    ``max_consecutive_slow`` the driver requests a checkpoint + re-mesh
+    (on real pods: drop the slow host; here: the hook fires and is tested
+    via injected delays);
+  * elastic re-mesh: ``restore_elastic`` reloads any checkpoint onto the
+    *current* mesh shape (ft.checkpoint reshards through host memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.ft.checkpoint import (AsyncCheckpointer, latest_step,
+                                 restore_checkpoint)
+
+__all__ = ["TrainDriver", "StragglerWatchdog", "FaultInjector"]
+
+
+class StragglerWatchdog:
+    """EWMA step-time tracker; flags outliers and escalates."""
+
+    def __init__(self, k: float = 3.0, max_consecutive: int = 3,
+                 warmup: int = 5):
+        self.k, self.max_consecutive, self.warmup = k, max_consecutive, warmup
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.consecutive = 0
+        self.events = []          # (step, dt, severity)
+
+    def observe(self, step: int, dt: float) -> str:
+        """Returns 'ok' | 'slow' | 'escalate'."""
+        self.n += 1
+        if self.n <= self.warmup:
+            a = 1.0 / self.n
+            self.mean += a * (dt - self.mean)
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return "ok"
+        std = max(self.var, 1e-12) ** 0.5
+        slow = dt > self.mean + self.k * std and dt > 1.2 * self.mean
+        a = 0.1
+        if not slow:              # don't poison stats with outliers
+            self.mean += a * (dt - self.mean)
+            self.var = (1 - a) * self.var + a * (dt - self.mean) ** 2
+            self.consecutive = 0
+            return "ok"
+        self.consecutive += 1
+        self.events.append((step, dt, "slow"))
+        if self.consecutive >= self.max_consecutive:
+            self.consecutive = 0
+            self.events.append((step, dt, "escalate"))
+            return "escalate"
+        return "slow"
+
+
+class FaultInjector:
+    """Deterministic fault schedule for tests: raise at given steps."""
+
+    def __init__(self, fail_at=(), delay_at=(), delay_s: float = 0.0):
+        self.fail_at = set(fail_at)
+        self.delay_at = set(delay_at)
+        self.delay_s = delay_s
+        self.fired = set()
+
+    def maybe_fire(self, step: int):
+        if step in self.delay_at:
+            time.sleep(self.delay_s)
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+class TrainDriver:
+    def __init__(self, train_step, tcfg: TrainConfig, data_fn,
+                 state_shardings=None, mesh=None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 on_remesh: Optional[Callable] = None):
+        self.train_step = train_step
+        self.tcfg = tcfg
+        self.data_fn = data_fn                   # step -> batch pytree
+        self.state_shardings = state_shardings
+        self.mesh = mesh
+        self.ckpt = AsyncCheckpointer(tcfg.checkpoint_dir)
+        self.watchdog = StragglerWatchdog()
+        self.faults = fault_injector
+        self.on_remesh = on_remesh
+        self.restarts = 0
+        self.metrics_log = []
+
+    # ------------------------------------------------------------------
+    def _restore(self, state):
+        step = latest_step(self.tcfg.checkpoint_dir)
+        if step is None:
+            return state, 0
+        restored = restore_checkpoint(
+            self.tcfg.checkpoint_dir, step,
+            shardings=self.state_shardings, mesh=self.mesh,
+        )
+        return restored, int(step)
+
+    def run(self, state, n_steps: int, start_step: int = 0,
+            max_restarts: int = 8):
+        step = start_step
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                if self.faults is not None:
+                    self.faults.maybe_fire(step)
+                batch = self.data_fn(step)
+                state, metrics = self.train_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                verdict = self.watchdog.observe(step, dt)
+                if verdict == "escalate" and self.on_remesh is not None:
+                    self.ckpt.wait()
+                    self.ckpt.save(step + 1, state)
+                    self.ckpt.wait()
+                    state = self.on_remesh(state)
+                self.metrics_log.append(
+                    {"step": step, "dt": dt,
+                     "loss": float(metrics["loss"])}
+                )
+                step += 1
+                if step % self.tcfg.checkpoint_every == 0:
+                    self.ckpt.save(step, state)
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                self.restarts += 1
+                if self.restarts > max_restarts:
+                    raise
+                self.ckpt.wait()
+                state, step = self._restore(state)
+        self.ckpt.wait()
+        return state

@@ -1,0 +1,3 @@
+from repro.kernels.block_circulant.ops import block_circulant_matmul
+
+__all__ = ["block_circulant_matmul"]

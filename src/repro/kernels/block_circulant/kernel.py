@@ -1,0 +1,176 @@
+"""Pallas TPU kernel: fused block-circulant matmul in the frequency domain.
+
+TPU adaptation of the paper's FPGA/ASIC dataflow (§5):
+
+  FPGA/ASIC                               this kernel
+  ---------                               -----------
+  FFT butterfly units (depth log k)   →   rDFT as a k×K dense matmul on the
+                                          MXU (K = k//2+1); at k=128 the
+                                          transform is a single 128-wide
+                                          systolic pass.
+  BRAM-resident FFT(w) weights        →   frequency-domain weights (wr, wi)
+                                          precomputed once outside the kernel
+                                          and streamed HBM→VMEM tile by tile.
+  ∘-multiply + accumulator            →   per-frequency-bin complex GEMM over
+                                          the q (input-block) grid axis,
+                                          accumulated in VMEM scratch (f32).
+  DDR→BRAM ping-pong buffers          →   Pallas grid pipeline: BlockSpec
+                                          double-buffers the next (x, w) tiles
+                                          while the MXU consumes the current.
+  IFFT + bias/activation peripheral   →   inverse rDFT matmul fused into the
+                                          same kernel on the final q step.
+
+Grid: ``(B/bB, p/pt, q/qt)`` with q innermost, so the frequency-domain
+accumulator lives in VMEM scratch across the contraction.
+
+The per-bin contraction ``y[b,p,f] += Σ_q x[b,q,f]·w[p,q,f]`` is expressed
+as a frequency-batched ``dot_general``; Mosaic unrolls the K batch entries
+into 2-D MXU dots. (The pure-XLA ``dft``/``freq`` paths in
+``repro.core.circulant`` remain the production fallback for toolchains
+without batched-dot support.) Correctness is validated in interpret mode
+against ``ref.block_circulant_matmul_ref`` over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bc_matmul_pallas", "choose_blocks"]
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def choose_blocks(B: int, p: int, q: int, k: int,
+                  vmem_budget: int = 8 * 1024 * 1024) -> Tuple[int, int, int]:
+    """Pick (bB, pt, qt) tile sizes.
+
+    Constraints:
+      * lane dim of the x tile (qt·k) and y tile (pt·k) should be a multiple
+        of 128 where the problem allows (MXU/VREG alignment);
+      * VMEM working set (x tile + w tiles + scratch + y tile) under budget.
+    """
+    K = k // 2 + 1
+    # lane-align the block counts for small k
+    unit = max(1, 128 // k)
+    qt = min(q, max(unit, 8 * unit))
+    pt = min(p, max(unit, 8 * unit))
+    bB = min(B, 128)
+    def vmem(bB, pt, qt):
+        x_t = bB * qt * k * 4
+        w_t = 2 * pt * qt * K * 4
+        acc = 2 * bB * pt * K * 4
+        y_t = bB * pt * k * 4
+        dft = 2 * k * K * 4 + 2 * K * k * 4
+        return 2 * (x_t + w_t) + acc + y_t + dft   # ×2: double buffering
+    while vmem(bB, pt, qt) > vmem_budget and bB > 8:
+        bB //= 2
+    while vmem(bB, pt, qt) > vmem_budget and pt > unit:
+        pt = max(unit, pt // 2)
+    while vmem(bB, pt, qt) > vmem_budget and qt > unit:
+        qt = max(unit, qt // 2)
+    return bB, pt, qt
+
+
+def _bc_kernel(x_ref, wr_ref, wi_ref, c_ref, s_ref, ci_ref, si_ref,
+               o_ref, yr_acc, yi_acc, *, k: int, nq: int, out_dtype):
+    """One (b, i, j) grid step. Shapes (per tile):
+      x_ref  : (bB, qt·k)      wr/wi : (pt, qt, K)
+      c/s    : (k, K)          ci/si : (K, k)
+      o_ref  : (bB, pt·k)      yr/yi : (bB, pt, K) f32 scratch
+    """
+    j = pl.program_id(2)
+    K = k // 2 + 1
+    bB = x_ref.shape[0]
+    qt = x_ref.shape[1] // k
+    pt = o_ref.shape[1] // k
+
+    @pl.when(j == 0)
+    def _zero():
+        yr_acc[...] = jnp.zeros_like(yr_acc)
+        yi_acc[...] = jnp.zeros_like(yi_acc)
+
+    xb = x_ref[...].astype(jnp.float32).reshape(bB * qt, k)
+    # forward rDFT on the MXU: (bB·qt, k) @ (k, K)
+    xr = (xb @ c_ref[...]).reshape(bB, qt, K)
+    xi = (xb @ s_ref[...]).reshape(bB, qt, K)
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    # per-bin complex GEMM: contract q, batch f  (bqf,pqf->bpf)
+    dn = (((1,), (1,)), ((2,), (2,)))   # contracting q; batching f
+    def dot(a, b):
+        # a (bB, qt, K), b (pt, qt, K) -> (K, bB, pt) -> (bB, pt, K)
+        r = jax.lax.dot_general(a, b, dimension_numbers=dn,
+                                preferred_element_type=jnp.float32)
+        return jnp.transpose(r, (1, 2, 0))
+    yr_acc[...] += dot(xr, wr) - dot(xi, wi)
+    yi_acc[...] += dot(xr, wi) + dot(xi, wr)
+
+    @pl.when(j == nq - 1)
+    def _finish():
+        yr = yr_acc[...].reshape(bB * pt, K)
+        yi = yi_acc[...].reshape(bB * pt, K)
+        # inverse rDFT on the MXU: (bB·pt, K) @ (K, k)
+        y = yr @ ci_ref[...] + yi @ si_ref[...]
+        o_ref[...] = y.reshape(bB, pt * k).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_b", "block_p", "block_q", "interpret"),
+)
+def bc_matmul_pallas(
+    x: jax.Array,
+    wr: jax.Array,
+    wi: jax.Array,
+    c: jax.Array,
+    s: jax.Array,
+    ci: jax.Array,
+    si: jax.Array,
+    *,
+    k: int,
+    block_b: int,
+    block_p: int,
+    block_q: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """x (B, q·k) × freq-weights (p, q, K)·2 -> y (B, p·k).
+
+    Caller (ops.py) guarantees B % block_b == 0, p % block_p == 0,
+    q % block_q == 0 (it pads otherwise).
+    """
+    B = x.shape[0]
+    p, q, K = wr.shape
+    assert K == k // 2 + 1
+    grid = (B // block_b, p // block_p, q // block_q)
+
+    kernel = functools.partial(
+        _bc_kernel, k=k, nq=grid[2], out_dtype=x.dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_q * k), lambda b, i, j: (b, j)),
+            pl.BlockSpec((block_p, block_q, K), lambda b, i, j: (i, j, 0)),
+            pl.BlockSpec((block_p, block_q, K), lambda b, i, j: (i, j, 0)),
+            pl.BlockSpec((k, K), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((k, K), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((K, k), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((K, k), lambda b, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_p * k), lambda b, i, j: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, p * k), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, block_p, K), jnp.float32),
+            pltpu.VMEM((block_b, block_p, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wr, wi, c, s, ci, si)

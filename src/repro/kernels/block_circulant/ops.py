@@ -1,0 +1,112 @@
+"""Public op: differentiable block-circulant matmul backed by the Pallas kernel.
+
+``block_circulant_matmul(x, w)``: x (..., q·k) × blocks w (p, q, k) -> (..., p·k)
+
+* forward  — Pallas kernel (frequency-domain fused; interpret mode on CPU).
+* backward — closed-form circulant adjoints (no dense expansion):
+    dL/dx  = g @ W           : block-circulant matvec with the *transposed*
+                               block table (W^T)_{ji} = W_ij^T; a circulant
+                               transpose is the index-reversed vector, i.e.
+                               conj(ŵ) in the frequency domain.
+    dL/dw[i,j] = Σ_b x_j ⋆ g_i  (circular cross-correlation)
+               = irfft( Σ_b conj(x̂_j) ∘ ĝ_i )
+  Both adjoints are O(n log n) — the paper's training-phase complexity claim.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.circulant import dft_bases
+from repro.kernels.block_circulant.kernel import bc_matmul_pallas, choose_blocks
+
+__all__ = ["block_circulant_matmul"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _forward(x2d: jax.Array, w: jax.Array, interpret: bool) -> jax.Array:
+    """x2d (B, q·k), w (p, q, k) -> (B, p·k) via the Pallas kernel."""
+    p, q, k = w.shape
+    B = x2d.shape[0]
+    K = k // 2 + 1
+    c, s, ci, si = dft_bases(k, jnp.float32)
+    wf = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)
+    wr, wi = jnp.real(wf), jnp.imag(wf)
+
+    bB, pt, qt = choose_blocks(B, p, q, k)
+    xp = _pad_to(x2d, 0, bB)
+    wr = _pad_to(_pad_to(wr, 0, pt), 1, qt)
+    wi = _pad_to(_pad_to(wi, 0, pt), 1, qt)
+    if wr.shape[1] != q:  # q padded -> pad x's block dim to match
+        xp = _pad_to(
+            xp.reshape(xp.shape[0], q, k), 1, qt
+        ).reshape(xp.shape[0], -1)
+    y = bc_matmul_pallas(
+        xp, wr, wi, c, s, ci, si,
+        k=k, block_b=bB, block_p=pt, block_q=qt, interpret=interpret,
+    )
+    return y[:B, : p * k]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _bc_matmul2d(x2d: jax.Array, w: jax.Array, interpret: bool) -> jax.Array:
+    return _forward(x2d, w, interpret)
+
+
+def _fwd(x2d, w, interpret):
+    return _forward(x2d, w, interpret), (x2d, w)
+
+
+def _bwd(interpret, res, g):
+    x2d, w = res
+    p, q, k = w.shape
+    xh = jnp.fft.rfft(
+        x2d.astype(jnp.float32).reshape(-1, q, k), axis=-1
+    )                                                    # (B, q, K)
+    gh = jnp.fft.rfft(
+        g.astype(jnp.float32).reshape(-1, p, k), axis=-1
+    )                                                    # (B, p, K)
+    wh = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)    # (p, q, K)
+    # dx̂[b,q,f] = Σ_p ĝ[b,p,f]·conj(ŵ[p,q,f])
+    dxh = jnp.einsum("bpf,pqf->bqf", gh, jnp.conj(wh))
+    dx = jnp.fft.irfft(dxh, n=k, axis=-1).reshape(x2d.shape).astype(x2d.dtype)
+    # dŵ[p,q,f] = Σ_b ĝ[b,p,f]·conj(x̂[b,q,f])
+    dwh = jnp.einsum("bpf,bqf->pqf", gh, jnp.conj(xh))
+    dw = jnp.fft.irfft(dwh, n=k, axis=-1).astype(w.dtype)
+    return dx, dw
+
+
+_bc_matmul2d.defvjp(_fwd, _bwd)
+
+
+def block_circulant_matmul(
+    x: jax.Array, w: jax.Array, *, interpret: Optional[bool] = None
+) -> jax.Array:
+    """Differentiable block-circulant matmul; arbitrary leading batch dims."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    p, q, k = w.shape
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, q * k)
+    y = _bc_matmul2d(x2d, w, bool(interpret))
+    return y.reshape(*lead, p * k)

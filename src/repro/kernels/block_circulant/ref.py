@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the block-circulant matmul kernel.
+
+The ground truth is the *dense* expansion: materialize every k×k circulant
+block and do an ordinary GEMM. O(B·m·n) — test-only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["block_circulant_matmul_ref", "blocks_to_dense"]
+
+
+def blocks_to_dense(w: jax.Array) -> jax.Array:
+    """w (p, q, k) -> dense (p·k, q·k); W[i·k+a, j·k+b] = w[i,j,(a-b) mod k]."""
+    p, q, k = w.shape
+    a = jnp.arange(k)
+    idx = (a[:, None] - a[None, :]) % k
+    blocks = w[:, :, idx]                                   # (p, q, k, k)
+    return jnp.transpose(blocks, (0, 2, 1, 3)).reshape(p * k, q * k)
+
+
+def block_circulant_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (..., q·k) @ BlockCirculant(w)^T -> (..., p·k), computed densely."""
+    W = blocks_to_dense(w.astype(jnp.float32))
+    y = x.astype(jnp.float32) @ W.T
+    return y.astype(x.dtype)

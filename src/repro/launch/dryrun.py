@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+512 placeholder host devices stand in for 2 pods × 256 chips; ``jax.jit``
+with the production in/out shardings runs the full GSPMD pipeline, and the
+compiled artifact yields memory_analysis (fits?), cost_analysis (FLOPs,
+bytes) and the post-SPMD HLO (collective schedule) for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --arch ... --impl freq   # beyond-paper impl
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>[__<impl>].json.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import ARCHS, LONG_CONTEXT_ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_model, input_specs
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.loop import make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\w[\w\d_\[\]]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+
+_HLO_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[8,128]{1,0}' -> bytes. Tuples handled by caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _HLO_DTYPE_BYTES.get(dt, 4)
+
+
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _parse_computations(hlo_text: str):
+    """Split post-optimization HLO into computations: name -> list of lines."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$", line)
+        if m and not line.lstrip().startswith("ROOT"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _while_multipliers(comps):
+    """Trip-count multiplier per computation.
+
+    XLA cost analysis (and a naive text scan) counts a while body ONCE; real
+    traffic is body × trip count. jax scans lower to whiles comparing the
+    induction variable against a constant — recover it from the condition
+    computation and propagate products down the call graph.
+    """
+    while_re = re.compile(
+        r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", )
+    const_re = re.compile(r"constant\((\d+)\)")
+    trips = {}       # body comp -> trip count
+    children = {}    # comp -> [(body, trips)]
+    for name, lines in comps.items():
+        kids = []
+        for line in lines:
+            m = while_re.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            consts = [int(c) for c in const_re.findall(
+                "\n".join(comps.get(cond, [])))]
+            trip = max(consts) if consts else 1
+            kids.append((body, max(trip, 1)))
+        children[name] = kids
+    mult = {}
+
+    def visit(name, m):
+        mult[name] = max(mult.get(name, 0), m)
+        for body, trip in children.get(name, []):
+            visit(body, m * trip)
+
+    roots = set(comps) - {b for kids in children.values() for b, _ in kids}
+    for r in roots:
+        visit(r, 1)
+    return mult
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device collective bytes by kind: raw (each op once — the naive
+    assignment-prescribed scan) and trip-weighted (× enclosing while-loop
+    trip counts — the physically meaningful number)."""
+    raw = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    weighted = dict.fromkeys(raw, 0)
+    count = dict.fromkeys(raw, 0)
+    comps = _parse_computations(hlo_text)
+    mult = _while_multipliers(comps)
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 1)
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m or "-done(" in line:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            if shape_str.startswith("("):
+                total = sum(_shape_bytes(s.strip())
+                            for s in shape_str[1:-1].split(",") if "[" in s)
+            else:
+                total = _shape_bytes(shape_str)
+            raw[kind] += total
+            weighted[kind] += total * m_comp
+            count[kind] += 1
+    return raw, count, weighted
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, impl: str = None,
+             seq_override: int = None):
+    cfg = get_config(arch)
+    if impl:
+        cfg = dataclasses.replace(
+            cfg, swm=dataclasses.replace(cfg.swm, impl=impl)
+            if impl != "dense"
+            else dataclasses.replace(cfg.swm, block_size=0))
+    shape = SHAPES[shape_name]
+    if seq_override:
+        shape = dataclasses.replace(shape, seq_len=seq_override)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    # production training uses gradient accumulation (8 microbatches):
+    # activation memory fits the 16 GB/chip envelope (EXPERIMENTS.md §Dry-run)
+    tcfg = TrainConfig(microbatch=8)
+    t0 = time.time()
+
+    from repro.dist.sharding import set_ambient_mesh
+    set_ambient_mesh(mesh)
+    with mesh:
+        specs = input_specs(cfg, shape, mesh, tcfg)
+        model = specs["model"]
+        if shape.kind == "train":
+            step = make_train_step(model, cfg, tcfg, mesh=mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(specs["state_shardings"],
+                              specs["batch_shardings"]),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(specs["state_sds"], specs["batch_sds"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, cfg)
+            args = [specs["params_sds"], specs["tokens_sds"],
+                    specs["cache_sds"]]
+            shardings = [specs["params_shardings"],
+                         specs["tokens_shardings"],
+                         specs["cache_shardings"]]
+            if "extra_sds" in specs:
+                args.append(specs["extra_sds"])
+                shardings.append(specs["extra_shardings"])
+            jitted = jax.jit(step, in_shardings=tuple(shardings),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+        else:
+            step = make_decode_step(model, cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(specs["params_shardings"],
+                              specs["tokens_shardings"],
+                              specs["cache_shardings"],
+                              specs["pos_shardings"]),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(specs["params_sds"], specs["tokens_sds"],
+                                   specs["cache_sds"], specs["pos_sds"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    from repro.launch.specs import count_params
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "impl": impl or cfg.swm.impl, "kind": shape.kind,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": count_params(cfg),
+        "tokens": (shape.global_batch * shape.seq_len
+                   if shape.kind != "decode" else shape.global_batch),
+    }
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    result[k] = int(v)
+    except Exception as e:  # backend may not support it
+        result["memory_analysis_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            result["flops"] = float(ca.get("flops", -1))
+            result["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+            result["transcendentals"] = float(ca.get("transcendentals", -1))
+    except Exception as e:
+        result["cost_analysis_error"] = str(e)
+    try:
+        hlo = compiled.as_text()
+        cb, cc, cw = collective_bytes(hlo)
+        result["collective_bytes"] = cb
+        result["collective_counts"] = cc
+        result["collective_bytes_weighted"] = cw
+        result["hlo_lines"] = hlo.count("\n")
+    except Exception as e:
+        result["hlo_error"] = str(e)
+    # analytic (structural) roofline terms — immune to the while-loop
+    # once-counting of cost_analysis; see launch/analytic.py
+    try:
+        from repro.launch.analytic import cell_model
+        result["analytic"] = cell_model(
+            cfg, shape, chips=int(np.prod(list(mesh.shape.values()))))
+    except Exception as e:
+        result["analytic_error"] = str(e)
+    return result
+
+
+def cells(include_long=True):
+    for arch in ARCHS:
+        for shape_name in SHAPES:
+            if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                continue  # skipped per DESIGN.md §Arch-applicability
+            if not include_long and shape_name == "long_500k":
+                continue
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--impl", default=None,
+                    help="override swm impl: paper|freq|dft|pallas|dense")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        for arch, shape in cells():
+            for mesh in ("single", "multi"):
+                todo.append((arch, shape, mesh))
+    else:
+        todo.append((args.arch, args.shape, args.mesh))
+
+    for arch, shape, mesh in todo:
+        tag = f"{arch}__{shape}__{mesh}" + (f"__{args.impl}" if args.impl else "")
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip] {tag}")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            res = run_cell(arch, shape, mesh, args.impl, args.seq)
+            status = "OK"
+        except Exception as e:
+            res = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            status = "FAIL"
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"[{status}] {tag} "
+              f"flops={res.get('flops')} "
+              f"coll={res.get('collective_bytes')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Serving launcher: loads (or inits) params and serves batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --batch 4 --cache-len 64
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs.registry import get_config, get_smoke
+from repro.ft.checkpoint import latest_step, restore_checkpoint
+from repro.launch.specs import build_model
+from repro.nn.module import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        step = latest_step(args.ckpt_dir)
+        state = restore_checkpoint(args.ckpt_dir, step)
+        params = state["params"]
+        print(f"restored checkpoint step {step}")
+    else:
+        params = init_params(model.specs(), 0)
+        print("serving freshly initialized params (demo mode)")
+
+    engine = ServeEngine(model, cfg, params, batch=args.batch,
+                         cache_len=args.cache_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).astype(np.int32),
+                    max_new=args.max_new)
+            for _ in range(args.n_requests)]
+    outs = engine.generate(reqs)
+    for i, o in enumerate(outs):
+        print(f"request {i}: {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""input_specs — ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+Nothing here allocates: params/opt-state come straight from ParamSpecs,
+caches via ``jax.eval_shape`` over ``model.init_cache``. Shardings are
+produced alongside so the dry-run can pass in_shardings that match what the
+production launcher would use.
+
+Shape-kind → lowered program:
+  train_*    → train_step(state, batch)
+  prefill_*  → prefill_step(params, tokens, cache[, frontend stub])
+  decode_* / long_* → decode_step(params, tokens(B,1), cache, pos)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig, SHAPES
+from repro.dist.sharding import (batch_pspec, data_axes, make_act_rules,
+                                 param_shardings, opt_shardings,
+                                 spec_to_pspec)
+from repro.models.decoder import HybridDecoderLM
+from repro.models.encdec import EncDecLM
+from repro.nn.module import specs_to_sds
+from repro.optim.optimizers import adafactor_state_specs, adamw_state_specs
+
+__all__ = ["build_model", "input_specs", "state_specs", "cache_sds",
+           "cache_shardings"]
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return HybridDecoderLM(cfg)
+
+
+def count_params(cfg: ModelConfig) -> Dict[str, float]:
+    """Stored + active + dense-equivalent parameter counts.
+
+    * stored: what actually lives in HBM (SWM tables are m·n/k)
+    * active: MoE experts scaled by top_k/E (MODEL_FLOPS uses this)
+    * dense_*: the same model with SWM off — the compression denominator
+    """
+    from repro.nn.module import flatten_with_paths
+
+    def counts(c: ModelConfig):
+        model = build_model(c)
+        total = active = embed = 0
+        frac = (c.n_experts_per_token / c.n_experts) if c.n_experts else 1.0
+        for path, spec in flatten_with_paths(model.specs()):
+            n = int(np.prod(spec.shape))
+            total += n
+            in_moe = any("ffn_moe" in p or p == "experts" for p in path)
+            active += n * (frac if in_moe else 1.0)
+            if path[0] == "embed":
+                embed += n
+        return total, active, embed
+
+    stored, stored_active, embed = counts(cfg)
+    dense_cfg = dataclasses.replace(
+        cfg, swm=dataclasses.replace(cfg.swm, block_size=0)
+    )
+    dense, dense_active, _ = counts(dense_cfg)
+    # FLOP-relevant N: embedding *gather* contributes ~0 FLOPs; the vocab
+    # projection (tied or untied head) contributes one d×V matmul per token
+    # — but only on positions where logits are computed (all for training,
+    # last-token for prefill/decode), so body and head are split.
+    head = cfg.d_model * cfg.vocab
+    body = stored_active - embed - (0 if cfg.tie_embeddings else head)
+    return {
+        "stored": stored, "stored_active": stored_active,
+        "dense": dense, "dense_active": dense_active,
+        "embed": embed,
+        "head_n": head,
+        "body_n": max(body, 0),
+        "flops_n": max(body, 0) + head,
+        "compression": dense / max(stored, 1),
+    }
+
+
+def state_specs(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    """(state SDS, state shardings) for train_step."""
+    model = build_model(cfg)
+    pspecs = model.specs()
+    if cfg.optimizer == "adafactor":
+        opt = adafactor_state_specs(pspecs, tcfg)
+    else:
+        opt = adamw_state_specs(pspecs, tcfg)
+    sds = {
+        "params": specs_to_sds(pspecs),
+        "opt": {k: specs_to_sds(v) for k, v in opt.items()},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    shardings = {
+        "params": param_shardings(mesh, pspecs, fsdp=cfg.fsdp, low_tp=cfg.low_tp),
+        "opt": {k: opt_shardings(mesh, v, fsdp=cfg.fsdp, low_tp=cfg.low_tp)
+                for k, v in opt.items()},
+        "step": NamedSharding(mesh, P()),
+    }
+    return sds, shardings
+
+
+def _frontend_dim(cfg: ModelConfig) -> int:
+    return cfg.d_model
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Training batch SDS + shardings (tokens carry S+1 for next-token)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    if cfg.family == "vlm":
+        sds["img"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_img_tokens, _frontend_dim(cfg)), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        enc = min(S, cfg.enc_seq or S)
+        sds["frames"] = jax.ShapeDtypeStruct(
+            (B, enc, _frontend_dim(cfg)), jnp.bfloat16
+        )
+    shardings = {
+        k: NamedSharding(mesh, batch_pspec(mesh, v.ndim, batch=v.shape[0]))
+        for k, v in sds.items()
+    }
+    return sds, shardings
+
+
+def cache_sds(cfg: ModelConfig, batch: int, cache_len: int):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+
+
+def cache_shardings(cfg: ModelConfig, cache_tree, mesh: Mesh):
+    """Shard caches: batch over DP (when divisible), kv heads over model.
+
+    Leaf layouts (possibly with leading stack dims):
+      kv cache k/v: (..., B, S, HKV, hd); pos: (..., B, S)
+      mamba: conv (..., B, dc-1, di), ssm (..., B, di, ds)
+      rwkv:  shift (..., B, d), wkv (..., B, H, hd, hd)
+    We identify the batch dim as the first dim equal to `batch`, shard it
+    over the DP axes if divisible; shard any dim divisible by the model
+    axis that matches known head/channel dims.
+    """
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    model_ok = "model" in mesh.axis_names
+    msize = mesh.shape["model"] if model_ok else 1
+
+    model_dims = set()
+    if cfg.n_kv_heads % max(msize, 1) == 0:
+        model_dims.add(cfg.n_kv_heads)
+    for d in (cfg.mamba_expand * cfg.d_model, cfg.d_ff, cfg.d_model,
+              cfg.d_model // max(cfg.rwkv_head_dim, 1)):
+        if d and d % max(msize, 1) == 0:
+            model_dims.add(d)
+
+    def one(leaf):
+        entries = [None] * leaf.ndim
+        used_dp = used_model = False
+        for i, d in enumerate(leaf.shape):
+            if not used_dp and dp and d != 1 and d % dp_size == 0 and i <= 1:
+                # batch-like leading dim
+                entries[i] = dp if len(dp) > 1 else dp[0]
+                used_dp = True
+                continue
+            if (not used_model and model_ok and d in model_dims
+                    and d % msize == 0 and i >= 1):
+                entries[i] = "model"
+                used_model = True
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, cache_tree)
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    tcfg: Optional[TrainConfig] = None,
+) -> Dict[str, Any]:
+    """Everything the dry-run needs to lower one cell."""
+    tcfg = tcfg or TrainConfig()
+    model = build_model(cfg)
+    out: Dict[str, Any] = {"model": model, "kind": shape.kind}
+    if shape.kind == "train":
+        sds, sh = state_specs(cfg, tcfg, mesh)
+        bsds, bsh = batch_specs(cfg, shape, mesh)
+        out.update(state_sds=sds, state_shardings=sh,
+                   batch_sds=bsds, batch_shardings=bsh)
+        return out
+
+    # serving cells: params only (no optimizer state)
+    pspecs = model.specs()
+    out["params_sds"] = specs_to_sds(pspecs)
+    out["params_shardings"] = param_shardings(mesh, pspecs, fsdp=False)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "prefill":
+        csds = cache_sds(cfg, B, S)
+        out["cache_sds"] = csds
+        out["cache_shardings"] = cache_shardings(cfg, csds, mesh)
+        out["tokens_sds"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        out["tokens_shardings"] = NamedSharding(mesh, batch_pspec(mesh, 2, batch=B))
+        if cfg.family == "vlm":
+            out["extra_sds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+            out["extra_shardings"] = NamedSharding(mesh, batch_pspec(mesh, 3, batch=B))
+        if cfg.family == "encdec":
+            enc = min(S, cfg.enc_seq or S)
+            out["extra_sds"] = jax.ShapeDtypeStruct(
+                (B, enc, cfg.d_model), jnp.bfloat16)
+            out["extra_shardings"] = NamedSharding(mesh, batch_pspec(mesh, 3, batch=B))
+        return out
+
+    # decode: one new token against a seq_len cache
+    csds = cache_sds(cfg, B, S)
+    out["cache_sds"] = csds
+    out["cache_shardings"] = cache_shardings(cfg, csds, mesh)
+    out["tokens_sds"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    out["tokens_shardings"] = NamedSharding(mesh, batch_pspec(mesh, 2, batch=B))
+    out["pos_sds"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    out["pos_shardings"] = NamedSharding(mesh, batch_pspec(mesh, 1, batch=B))
+    return out

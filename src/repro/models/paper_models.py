@@ -1,0 +1,207 @@
+"""The paper's own evaluation models (§6, Tables 1–2).
+
+  * MNIST MLP-1/2 — small multi-layer perceptrons (92.9% / 95.6% rows)
+  * ASIC net      — the exact 512-512-512-64-10 network of Table 2, with
+                    64-point FFT blocks (k=64) on all but the output layer
+                    (the paper keeps the 64×10 output dense)
+  * LeNet-like CNN— the 99.0% MNIST row (CONV layers block-circulant per
+                    CirCNN)
+  * SWM-LSTM ASR  — Google-LSTM (2×1024 cells, 512 proj) on TIMIT-like
+                    features; FFT8 / FFT16 variants (Table 1 LSTM rows)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SWMConfig
+from repro.core.conv import CirculantConv2D
+from repro.core.lstm import SWMLSTM
+from repro.core.quant import fixed_point
+from repro.nn.linear import Linear
+from repro.nn.module import ParamSpec
+
+__all__ = ["SWMMLP", "ASICNet", "SWMCNN", "SWMLSTMASR"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SWMMLP:
+    """MLP with block-circulant hidden layers; dense output layer."""
+
+    dims: Tuple[int, ...] = (784, 512, 512, 10)
+    block_size: int = 64
+    quant_bits: int = 0          # 0 = off; 12 reproduces the paper's DCNN rows
+    impl: str = "freq"
+
+    def _swm(self):
+        return SWMConfig(block_size=self.block_size, impl=self.impl,
+                         targets=("ffn",))
+
+    def _layers(self):
+        out = []
+        for i in range(len(self.dims) - 1):
+            last = i == len(self.dims) - 2
+            out.append(Linear(
+                in_dim=self.dims[i], out_dim=self.dims[i + 1],
+                in_axis=None, out_axis=None,
+                family="head" if last else "ffn",      # output stays dense
+                swm=self._swm(), dtype="float32",
+            ))
+        return out
+
+    def specs(self):
+        s = {}
+        for i, lin in enumerate(self._layers()):
+            s[f"fc{i}"] = lin.specs()
+            s[f"b{i}"] = ParamSpec((self.dims[i + 1],), jnp.float32, (None,),
+                                   init="zeros")
+        return s
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        layers = self._layers()
+        for i, lin in enumerate(layers):
+            w = params[f"fc{i}"]
+            if self.quant_bits:
+                w = jax.tree.map(
+                    lambda a: fixed_point(a, self.quant_bits, self.quant_bits - 4), w
+                )
+                x = fixed_point(x, self.quant_bits, self.quant_bits - 4)
+            x = lin(w, x) + params[f"b{i}"]
+            if i < len(layers) - 1:
+                x = jax.nn.relu(x)
+        return x
+
+    @property
+    def n_params_dense(self) -> int:
+        return sum(self.dims[i] * self.dims[i + 1] for i in range(len(self.dims) - 1))
+
+    @property
+    def n_params(self) -> int:
+        return sum(l.n_params for l in self._layers())
+
+
+def ASICNet(block_size: int = 64, quant_bits: int = 12) -> SWMMLP:
+    """Table 2's exact network: 512-512-512-64-10, 64-point FFT blocks."""
+    return SWMMLP(dims=(512, 512, 512, 64, 10), block_size=block_size,
+                  quant_bits=quant_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class SWMCNN:
+    """LeNet-like CNN with block-circulant CONV + FC (99.0% MNIST row)."""
+
+    in_hw: int = 28
+    channels: Tuple[int, ...] = (1, 32, 64)
+    fc_dims: Tuple[int, ...] = (1024, 128, 10)
+    conv_block: int = 8
+    fc_block: int = 64
+    quant_bits: int = 0
+
+    def _convs(self):
+        return [
+            CirculantConv2D(in_ch=self.channels[i], out_ch=self.channels[i + 1],
+                            ksize=5, block_size=self.conv_block)
+            for i in range(len(self.channels) - 1)
+        ]
+
+    def _fcs(self):
+        swm = SWMConfig(block_size=self.fc_block, targets=("ffn",))
+        out = []
+        for i in range(len(self.fc_dims) - 1):
+            last = i == len(self.fc_dims) - 2
+            out.append(Linear(
+                in_dim=self.fc_dims[i], out_dim=self.fc_dims[i + 1],
+                in_axis=None, out_axis=None,
+                family="head" if last else "ffn", swm=swm, dtype="float32",
+            ))
+        return out
+
+    def specs(self):
+        s = {}
+        for i, c in enumerate(self._convs()):
+            s[f"conv{i}"] = c.specs()
+        for i, l in enumerate(self._fcs()):
+            s[f"fc{i}"] = l.specs()
+            s[f"fb{i}"] = ParamSpec((self.fc_dims[i + 1],), jnp.float32,
+                                    (None,), init="zeros")
+        return s
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        """x (B, H, W, 1) -> logits (B, 10)."""
+        for i, conv in enumerate(self._convs()):
+            x = jax.nn.relu(conv(params[f"conv{i}"], x))
+            # 2×2 max-pool (paper: POOL is O(n), max-pooling dominant type)
+            B, H, W, C = x.shape
+            x = x[:, : H // 2 * 2, : W // 2 * 2, :]
+            x = x.reshape(B, H // 2, 2, W // 2, 2, C).max(axis=(2, 4))
+        x = x.reshape(x.shape[0], -1)
+        fcs = self._fcs()
+        # project flattened features to fc_dims[0] expectations
+        assert x.shape[-1] == self.fc_dims[0], (x.shape, self.fc_dims)
+        for i, lin in enumerate(fcs):
+            x = lin(params[f"fc{i}"], x) + params[f"fb{i}"]
+            if i < len(fcs) - 1:
+                x = jax.nn.relu(x)
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class SWMLSTMASR:
+    """Stacked Google-LSTM for TIMIT-like ASR (Table 1 LSTM rows).
+
+    ESE-matched geometry: input 153 features (fbank+deltas context window),
+    2 layers × 1024 cells, 512 projection, 39-phone output.
+    """
+
+    d_in: int = 153
+    d_cell: int = 1024
+    d_proj: int = 512
+    n_layers: int = 2
+    n_phones: int = 39
+    block_size: int = 16          # FFT16 → "LSTM1"; 8 → "LSTM2"
+
+    def _swm(self):
+        return SWMConfig(block_size=self.block_size, targets=("lstm",))
+
+    @property
+    def d_in_padded(self) -> int:
+        """ESE's 153 fbank features zero-padded to a block multiple so the
+        input gate matrices are circulant too (deployments pad; gcd(153,
+        1024)=1 would otherwise force layer-0 W·x dense)."""
+        k = max(1, self.block_size)
+        return ((self.d_in + k - 1) // k) * k
+
+    def _cells(self):
+        cells = []
+        for i in range(self.n_layers):
+            cells.append(SWMLSTM(
+                d_in=self.d_in_padded if i == 0 else self.d_proj,
+                d_cell=self.d_cell, d_proj=self.d_proj, swm=self._swm(),
+            ))
+        return cells
+
+    def specs(self):
+        s = {}
+        for i, c in enumerate(self._cells()):
+            s[f"lstm{i}"] = c.specs()
+        s["out"] = Linear(in_dim=self.d_proj, out_dim=self.n_phones,
+                          in_axis=None, out_axis=None, family="head",
+                          swm=self._swm(), dtype="float32").specs()
+        s["out_b"] = ParamSpec((self.n_phones,), jnp.float32, (None,),
+                               init="zeros")
+        return s
+
+    def __call__(self, params, xs: jax.Array) -> jax.Array:
+        """xs (B, T, d_in) -> per-frame phone logits (B, T, n_phones)."""
+        pad = self.d_in_padded - self.d_in
+        h = jnp.pad(xs, ((0, 0), (0, 0), (0, pad))) if pad else xs
+        for i, cell in enumerate(self._cells()):
+            h, _ = cell(params[f"lstm{i}"], h)
+        out = Linear(in_dim=self.d_proj, out_dim=self.n_phones,
+                     in_axis=None, out_axis=None, family="head",
+                     swm=self._swm(), dtype="float32")(params["out"], h)
+        return out + params["out_b"]

@@ -1,0 +1,99 @@
+"""Feed-forward blocks: SwiGLU (LM family) and GeLU MLP (enc-dec), SWM-aware."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import Linear
+
+__all__ = ["SwiGLU", "MLP"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SwiGLU:
+    """wo( silu(wi(x)) * wu(x) ) — llama/gemma/qwen FFN."""
+
+    d_model: int
+    d_ff: int
+    swm: "SWMConfig" = None
+    stack: Tuple[int, ...] = ()
+    expert_dims: Tuple[int, ...] = ()
+    family: str = "ffn"
+    dtype: str = "bfloat16"
+
+    def _lin(self, i, o, ia, oa):
+        return Linear(
+            in_dim=i, out_dim=o, in_axis=ia, out_axis=oa,
+            family=self.family, swm=self.swm, stack=self.stack,
+            expert_dims=self.expert_dims, dtype=self.dtype,
+        )
+
+    @property
+    def wi(self):
+        return self._lin(self.d_model, self.d_ff, "embed", "mlp")
+
+    @property
+    def wu(self):
+        return self._lin(self.d_model, self.d_ff, "embed", "mlp")
+
+    @property
+    def wo(self):
+        return self._lin(self.d_ff, self.d_model, "mlp", "embed")
+
+    def specs(self):
+        return {"wi": self.wi.specs(), "wu": self.wu.specs(), "wo": self.wo.specs()}
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        wi, wu = self.wi, self.wu
+        if (wi.is_circulant and wu.is_circulant
+                and wi.block_size == wu.block_size
+                and self.swm is not None and self.swm.impl == "dft"
+                and not self.expert_dims):
+            # fused pair: the gate/up projections share one forward DFT
+            from repro.core.circulant import block_circulant_apply_pair
+            gi, ui = block_circulant_apply_pair(
+                x, params["wi"]["w"], params["wu"]["w"])
+            g, u = jax.nn.silu(gi), ui
+        else:
+            g = jax.nn.silu(wi(params["wi"], x))
+            u = wu(params["wu"], x)
+        return self.wo(params["wo"], g * u)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    """wo(gelu(wi(x))) — classic 2-matrix FFN (seamless-m4t, paper's MLPs)."""
+
+    d_model: int
+    d_ff: int
+    swm: "SWMConfig" = None
+    stack: Tuple[int, ...] = ()
+    family: str = "ffn"
+    dtype: str = "bfloat16"
+
+    @property
+    def wi(self):
+        return Linear(
+            in_dim=self.d_model, out_dim=self.d_ff, in_axis="embed",
+            out_axis="mlp", family=self.family, swm=self.swm,
+            stack=self.stack, dtype=self.dtype,
+        )
+
+    @property
+    def wo(self):
+        return Linear(
+            in_dim=self.d_ff, out_dim=self.d_model, in_axis="mlp",
+            out_axis="embed", family=self.family, swm=self.swm,
+            stack=self.stack, dtype=self.dtype,
+        )
+
+    def specs(self):
+        return {"wi": self.wi.specs(), "wo": self.wo.specs()}
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        return self.wo(params["wo"], jax.nn.gelu(self.wi(params["wi"], x)))

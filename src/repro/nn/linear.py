@@ -1,0 +1,123 @@
+"""Linear projections — dense or block-circulant (SWM), one API.
+
+``Linear`` is the single projection primitive used everywhere in the model
+zoo. When the layer's family is in ``swm.targets`` and the dims admit a
+block size > 1, the parameter is the (p, q, k) circulant block table instead
+of the (in, out) dense kernel — the paper's compression applied as a
+first-class feature, not a bolt-on.
+
+Sharding: the circulant table keeps the *same logical axis names* as the
+dense kernel would have — q-axis (input blocks) gets the input logical axis,
+p-axis (output blocks) the output logical axis — so the TP/FSDP rule table
+applies unchanged (column-/row-parallel circulant layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SWMConfig
+from repro.core import circulant as circ
+from repro.nn.module import ParamSpec
+
+__all__ = ["Linear", "linear_specs", "linear_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    """A (possibly stacked) projection ``(..., in_dim) -> (..., out_dim)``.
+
+    stack: leading layer-stack dims (scan-over-layers), e.g. (n_repeat,).
+    in_axis/out_axis: logical sharding axis names.
+    family: 'attn' | 'ffn' | 'expert' | 'head' | ... — SWM applicability.
+    expert_dims: extra leading *expert* dims (E,) for MoE weights; these get
+      the 'experts' logical axis.
+    """
+
+    in_dim: int
+    out_dim: int
+    in_axis: Optional[str] = None
+    out_axis: Optional[str] = None
+    family: str = "ffn"
+    swm: SWMConfig = dataclasses.field(default_factory=SWMConfig)
+    stack: Tuple[int, ...] = ()
+    expert_dims: Tuple[int, ...] = ()
+    dtype: str = "bfloat16"
+    scale: Optional[float] = None       # default: 1/sqrt(in_dim)
+
+    # --------------------------------------------------------------
+    @property
+    def block_size(self) -> int:
+        if not self.swm.applies_to(self.family):
+            return 1
+        return circ.valid_block_size(self.swm.block_size, self.in_dim, self.out_dim)
+
+    @property
+    def is_circulant(self) -> bool:
+        return self.block_size > 1
+
+    def specs(self):
+        k = self.block_size
+        lead = self.stack + self.expert_dims
+        lead_axes = ("layers",) * len(self.stack) + ("experts",) * len(
+            self.expert_dims
+        )
+        # Variance-preserving init: dense var 1/in_dim. A circulant row has
+        # in_dim/k blocks × k entries reused k times; matching output variance
+        # requires var(w) = 1/in_dim as well (each output sums in_dim terms).
+        std = self.scale if self.scale is not None else self.in_dim**-0.5
+        if k > 1:
+            p, q = self.out_dim // k, self.in_dim // k
+            w = ParamSpec(
+                lead + (p, q, k),
+                jnp.dtype(self.dtype),
+                lead_axes + (self.out_axis, self.in_axis, None),
+                init="normal",
+                scale=std,
+            )
+        else:
+            w = ParamSpec(
+                lead + (self.in_dim, self.out_dim),
+                jnp.dtype(self.dtype),
+                lead_axes + (self.in_axis, self.out_axis),
+                init="normal",
+                scale=std,
+            )
+        return {"w": w}
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        """Apply. params['w'] must already have stack/expert dims consumed
+        (scan slices the stack axis; MoE vmaps the expert axis)."""
+        w = params["w"]
+        if self.is_circulant:
+            return circ.block_circulant_apply(
+                x, w, impl=self.swm.impl, karatsuba=self.swm.karatsuba
+            )
+        return jnp.einsum(
+            "...i,io->...o", x, w.astype(x.dtype)
+        )
+
+    # convenience for param counting / compression reporting
+    @property
+    def n_params(self) -> int:
+        k = self.block_size
+        base = (self.in_dim * self.out_dim) // k if k > 1 else self.in_dim * self.out_dim
+        for d in self.stack + self.expert_dims:
+            base *= d
+        return base
+
+    @property
+    def compression(self) -> float:
+        return float(self.block_size)
+
+
+def linear_specs(lin: Linear):
+    return lin.specs()
+
+
+def linear_apply(lin: Linear, params, x):
+    return lin(params, x)

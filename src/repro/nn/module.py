@@ -1,0 +1,157 @@
+"""Minimal parameter-spec module system (no flax dependency).
+
+Params are plain pytrees (nested dicts of jnp arrays). Every leaf is declared
+up front as a :class:`ParamSpec` carrying shape / dtype / *logical* sharding
+axes / initializer, so one declaration serves three consumers:
+
+  * ``init_params``    — materialize arrays (seeded per-path, deterministic)
+  * ``specs_to_sds``   — ``jax.ShapeDtypeStruct`` stand-ins for the multi-pod
+                         dry-run (no device allocation ever happens)
+  * ``specs_to_shardings`` — logical axes -> physical mesh axes via the
+                         rule table in :mod:`repro.dist.sharding`
+
+Layer "stacks" (scan-over-layers) are expressed directly in the spec: a
+stacked parameter simply declares a leading ``layers`` axis. There is no
+separate stacking transform.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Mapping, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "specs_to_sds",
+    "map_specs",
+    "flatten_with_paths",
+    "param_count",
+    "param_bytes",
+]
+
+InitFn = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of a single parameter tensor.
+
+    Attributes:
+      shape: full shape, including any leading layer-stack axis.
+      dtype: storage dtype (bf16 for big weights, f32 for norms/biases).
+      axes:  logical axis names, one per dim (``None`` = never sharded).
+             e.g. ``("layers", "embed", "heads")``.
+      init:  one of "normal" | "zeros" | "ones" | "uniform" | callable.
+      scale: std (normal) or bound (uniform). Layer constructors compute
+             fan-in-aware scales themselves.
+    """
+
+    shape: tuple
+    dtype: Any = jnp.float32
+    axes: tuple = ()
+    init: Union[str, InitFn] = "normal"
+    scale: float = 0.02
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        object.__setattr__(self, "axes", tuple(self.axes))
+        if len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} must match shape {self.shape} rank"
+            )
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if callable(self.init):
+            return self.init(key, self.shape, self.dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "normal":
+            return (
+                jax.random.normal(key, self.shape, jnp.float32) * self.scale
+            ).astype(self.dtype)
+        if self.init == "uniform":
+            return jax.random.uniform(
+                key, self.shape, jnp.float32, -self.scale, self.scale
+            ).astype(self.dtype)
+        raise ValueError(f"unknown init {self.init!r}")
+
+    @property
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _walk(tree, path=()):
+    """Yield (path, spec) for every ParamSpec leaf in a nested dict tree."""
+    if _is_spec(tree):
+        yield path, tree
+        return
+    if isinstance(tree, Mapping):
+        for k in sorted(tree.keys()):
+            yield from _walk(tree[k], path + (k,))
+        return
+    if tree is None:
+        return
+    raise TypeError(f"spec trees are nested dicts of ParamSpec; got {type(tree)} at {path}")
+
+
+def flatten_with_paths(tree):
+    return list(_walk(tree))
+
+
+def _path_key(root: jax.Array, path) -> jax.Array:
+    """Deterministic per-path RNG: fold a stable hash of the path string."""
+    h = int.from_bytes(
+        hashlib.blake2b("/".join(map(str, path)).encode(), digest_size=4).digest(),
+        "big",
+    )
+    return jax.random.fold_in(root, h)
+
+
+def map_specs(fn: Callable[[tuple, ParamSpec], Any], tree):
+    """Structure-preserving map over a spec tree; fn(path, spec) -> leaf."""
+    if _is_spec(tree):
+        return fn((), tree)
+
+    def rec(t, path):
+        if _is_spec(t):
+            return fn(path, t)
+        if isinstance(t, Mapping):
+            return {k: rec(v, path + (k,)) for k, v in t.items()}
+        if t is None:
+            return None
+        raise TypeError(f"bad spec tree node {type(t)} at {path}")
+
+    return rec(tree, ())
+
+
+def init_params(specs, seed: Union[int, jax.Array]):
+    """Materialize a spec tree into an array pytree. Deterministic in seed."""
+    root = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    return map_specs(lambda p, s: s.materialize(_path_key(root, p)), specs)
+
+
+def specs_to_sds(specs):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return map_specs(lambda p, s: s.sds, specs)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _walk(specs))
+
+
+def param_bytes(specs) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for _, s in _walk(specs)
+    )

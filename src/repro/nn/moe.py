@@ -1,0 +1,117 @@
+"""Mixture-of-Experts with scatter-based capacity dispatch (GShard-style).
+
+Expert parallelism: the expert axis carries the 'experts' logical axis →
+sharded over the mesh 'model' axis. Token→expert dispatch is a scatter-add
+into an (E, C, d) buffer; GSPMD inserts the all-to-all when the token
+sharding (batch over 'data') meets the expert sharding ('model').
+
+Routing is a plain dense GEMM + top-k — never SWM-compressed (it is not one
+of the paper's weight-matrix targets; see DESIGN.md §Arch-applicability).
+Expert FFN weights ARE compressed when `swm.targets` includes 'expert' —
+on arctic-480b this is where the paper's O(n)-storage claim bites hardest
+(128 experts × 35 layers of circulant tables instead of dense matrices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.ffn import SwiGLU
+from repro.nn.linear import Linear
+
+__all__ = ["MoE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    swm: "SWMConfig" = None
+    stack: Tuple[int, ...] = ()
+    dtype: str = "bfloat16"
+
+    @property
+    def router(self):
+        return Linear(
+            in_dim=self.d_model, out_dim=self.n_experts,
+            in_axis="embed", out_axis=None, family="router",
+            swm=self.swm, stack=self.stack, dtype="float32",
+        )
+
+    @property
+    def experts(self):
+        return SwiGLU(
+            d_model=self.d_model, d_ff=self.d_ff, swm=self.swm,
+            stack=self.stack, expert_dims=(self.n_experts,),
+            family="expert", dtype=self.dtype,
+        )
+
+    def specs(self):
+        return {"router": self.router.specs(), "experts": self.experts.specs()}
+
+    # ------------------------------------------------------------------
+    def __call__(self, params, x: jax.Array):
+        """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+        B, S, d = x.shape
+        E, T = self.n_experts, self.top_k
+        N = B * S
+        xt = x.reshape(N, d)
+
+        logits = self.router(params["router"], xt).astype(jnp.float32)  # (N, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, expert_idx = jax.lax.top_k(probs, T)                       # (N, T)
+        gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+        # capacity per expert (static)
+        C = max(1, int(N * T / E * self.capacity_factor))
+        C = min(C, N)
+
+        # position of each (token, slot) within its expert's capacity —
+        # sort-based, O(N·T) memory. (A cumsum over a one-hot (N·T, E)
+        # tensor needs N·T·E ints: 537 GB for qwen3-moe train_4k. Measured;
+        # see EXPERIMENTS.md §Perf.)
+        flat_e = expert_idx.reshape(-1)                                  # (N·T,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))            # (E,)
+        pos_sorted = jnp.arange(N * T) - seg_start[sorted_e]
+        pos = jnp.zeros((N * T,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32)).reshape(N, T)
+        keep = (pos < C)
+        pos = jnp.where(keep, pos, 0)
+
+        # dispatch: scatter tokens into (E, C, d)
+        disp = jnp.zeros((E, C, d), x.dtype)
+        contrib = xt[:, None, :] * keep[..., None].astype(x.dtype)       # (N,T,d)
+        disp = disp.at[expert_idx, pos].add(contrib)
+
+        # expert compute — vmap the SwiGLU over the expert axis; the expert
+        # hiddens (E, C, d_ff) are rematerialized in backward (arctic:
+        # 128 experts × capacity × 4864 would otherwise dominate HBM)
+        @jax.checkpoint
+        def one_expert(p, xe):
+            return SwiGLU(
+                d_model=self.d_model, d_ff=self.d_ff, swm=self.swm,
+                stack=(), expert_dims=(), family="expert", dtype=self.dtype,
+            )(p, xe)
+
+        y_exp = jax.vmap(one_expert)(params["experts"], disp)            # (E, C, d)
+
+        # combine: gather each token's expert outputs
+        y_tok = y_exp[expert_idx, pos]                                   # (N, T, d)
+        w = (gate * keep.astype(gate.dtype))[..., None].astype(x.dtype)
+        y = (y_tok * w).sum(axis=1).reshape(B, S, d)
+
+        # load-balance aux loss (Switch): E · Σ_e f_e · P_e
+        f = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (N * T)
+        P = probs.mean(axis=0)
+        aux = E * jnp.sum(f * P)
+        return y, aux

@@ -1,0 +1,204 @@
+"""RWKV-6 "Finch" — attention-free mixer with data-dependent decay.
+
+SWM applicability: the r/k/v/g/o and channel-mix *projections* are weight
+GEMMs → circulant-compressible. The WKV recurrence (token shift, decay
+state update) is elementwise/scan-structured, not a weight matrix → left
+native (DESIGN.md §Arch-applicability).
+
+State per layer: token-shift last-x for time-mix and channel-mix, plus the
+per-head (hd × hd) WKV matrix state → O(1) memory in sequence length, which
+is why rwkv6-7b runs the long_500k decode cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import Linear
+from repro.nn.module import ParamSpec
+
+__all__ = ["RWKV6TimeMix", "RWKV6ChannelMix", "init_rwkv_cache"]
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init_rwkv_cache(batch: int, d_model: int, n_heads: int, head_dim: int, dtype):
+    return {
+        "shift_att": jnp.zeros((batch, d_model), dtype),
+        "shift_ffn": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]):
+    """x (B,S,d) -> previous-token x; last (B,d) carries across calls."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+    return prev
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6TimeMix:
+    cfg: ModelConfig
+    stack: Tuple[int, ...] = ()
+
+    @property
+    def n_heads(self) -> int:
+        return self.cfg.d_model // self.cfg.rwkv_head_dim
+
+    def _lin(self, i, o, oa, family="attn"):
+        return Linear(in_dim=i, out_dim=o, in_axis="embed", out_axis=oa,
+                      family=family, swm=self.cfg.swm, stack=self.stack,
+                      dtype=self.cfg.param_dtype)
+
+    def specs(self):
+        d = self.cfg.d_model
+        H, hd = self.n_heads, self.cfg.rwkv_head_dim
+        L, la = self.stack, ("layers",) * len(self.stack)
+        dl, ml = self.cfg.rwkv_decay_lora, self.cfg.rwkv_mix_lora
+        f32 = jnp.float32
+        return {
+            "mu_x": ParamSpec(L + (d,), f32, la + (None,), init="uniform", scale=0.5),
+            "mu": ParamSpec(L + (5, d), f32, la + (None, None), init="uniform", scale=0.5),
+            "mix_A": ParamSpec(L + (d, 5 * ml), f32, la + (None, None),
+                               init="normal", scale=d**-0.5),
+            "mix_B": ParamSpec(L + (5, ml, d), f32, la + (None, None, None),
+                               init="normal", scale=ml**-0.5),
+            "w0": ParamSpec(L + (d,), f32, la + (None,), init="uniform", scale=1.0),
+            "w_A": ParamSpec(L + (d, dl), f32, la + (None, None),
+                             init="normal", scale=d**-0.5),
+            "w_B": ParamSpec(L + (dl, d), f32, la + (None, None),
+                             init="normal", scale=dl**-0.5),
+            "u": ParamSpec(L + (H, hd), f32, la + ("heads", None),
+                           init="uniform", scale=0.5),
+            "r": self._lin(d, d, "heads").specs(),
+            "k": self._lin(d, d, "heads").specs(),
+            "v": self._lin(d, d, "heads").specs(),
+            "g": self._lin(d, d, "heads").specs(),
+            "o": Linear(in_dim=d, out_dim=d, in_axis="heads", out_axis="embed",
+                        family="attn", swm=self.cfg.swm, stack=self.stack,
+                        dtype=self.cfg.param_dtype).specs(),
+            "ln_scale": ParamSpec(L + (d,), f32, la + (None,), init="ones"),
+            "ln_bias": ParamSpec(L + (d,), f32, la + (None,), init="zeros"),
+        }
+
+    # ------------------------------------------------------------------
+    def __call__(self, params, x, cache: Optional[dict] = None):
+        cfg = self.cfg
+        B, S, d = x.shape
+        H, hd = self.n_heads, cfg.rwkv_head_dim
+
+        last = cache["shift_att"] if cache is not None else None
+        prev = _token_shift(x, last)
+        dx = (prev - x).astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+
+        # data-dependent token-shift mix (Finch ddlerp)
+        xx = xf + dx * params["mu_x"]
+        lora = jnp.tanh(xx @ params["mix_A"]).reshape(B, S, 5, -1)
+        mix = params["mu"] + jnp.einsum("bsfm,fmd->bsfd", lora, params["mix_B"])
+        xs = xf[:, :, None, :] + dx[:, :, None, :] * mix      # (B,S,5,d)
+        xw, xk, xv, xr, xg = [xs[:, :, i].astype(x.dtype) for i in range(5)]
+
+        # data-dependent decay
+        ww = params["w0"] + jnp.tanh(
+            xw.astype(jnp.float32) @ params["w_A"]
+        ) @ params["w_B"]
+        w = jnp.exp(-jnp.exp(ww.astype(jnp.float32)))         # (B,S,d) in (0,1)
+
+        r = self._lin(d, d, "heads")(params["r"], xr).reshape(B, S, H, hd)
+        k = self._lin(d, d, "heads")(params["k"], xk).reshape(B, S, H, hd)
+        v = self._lin(d, d, "heads")(params["v"], xv).reshape(B, S, H, hd)
+        g = self._lin(d, d, "heads")(params["g"], xg)
+        wh = w.reshape(B, S, H, hd)
+        u = params["u"]
+
+        s0 = (
+            cache["wkv"]
+            if cache is not None
+            else jnp.zeros((B, H, hd, hd), jnp.float32)
+        )
+
+        def step(s, t):
+            r_t, k_t, v_t, w_t = t                            # (B,H,hd) each
+            kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,hd,hd)
+            y = jnp.einsum(
+                "bhk,bhkv->bhv", r_t * u[None], kv
+            ) + jnp.einsum("bhk,bhkv->bhv", r_t, s)
+            s = w_t[..., :, None] * s + kv
+            return s, y
+
+        ts = tuple(
+            jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, wh)
+        )
+        from repro.nn.scan import chunked_time_scan
+        sT, ys = chunked_time_scan(step, s0, ts, chunk=256, remat=S > 256)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)           # (B,S,d) f32
+
+        # per-head groupnorm, then gate
+        yh = y.reshape(B, S, H, hd)
+        mu = yh.mean(-1, keepdims=True)
+        var = yh.var(-1, keepdims=True)
+        yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+        y = yh.reshape(B, S, d) * params["ln_scale"] + params["ln_bias"]
+        y = (y.astype(x.dtype)) * jax.nn.silu(g)
+        out = Linear(in_dim=d, out_dim=d, in_axis="heads", out_axis="embed",
+                     family="attn", swm=cfg.swm, stack=self.stack,
+                     dtype=cfg.param_dtype)(params["o"], y)
+
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "shift_att": x[:, -1, :],
+                "wkv": sT,
+            }
+        return out, new_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6ChannelMix:
+    cfg: ModelConfig
+    stack: Tuple[int, ...] = ()
+
+    def specs(self):
+        d, dff = self.cfg.d_model, self.cfg.d_ff
+        L, la = self.stack, ("layers",) * len(self.stack)
+        f32 = jnp.float32
+        lin = lambda i, o, ia, oa: Linear(
+            in_dim=i, out_dim=o, in_axis=ia, out_axis=oa, family="ffn",
+            swm=self.cfg.swm, stack=self.stack, dtype=self.cfg.param_dtype,
+        )
+        return {
+            "mu_k": ParamSpec(L + (d,), f32, la + (None,), init="uniform", scale=0.5),
+            "mu_r": ParamSpec(L + (d,), f32, la + (None,), init="uniform", scale=0.5),
+            "wk": lin(d, dff, "embed", "mlp").specs(),
+            "wr": lin(d, d, "embed", None).specs(),
+            "wv": lin(dff, d, "mlp", "embed").specs(),
+        }
+
+    def __call__(self, params, x, cache: Optional[dict] = None):
+        cfg = self.cfg
+        d, dff = cfg.d_model, cfg.d_ff
+        last = cache["shift_ffn"] if cache is not None else None
+        prev = _token_shift(x, last)
+        dx = (prev - x).astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+        xk = (xf + dx * params["mu_k"]).astype(x.dtype)
+        xr = (xf + dx * params["mu_r"]).astype(x.dtype)
+        lin = lambda i, o, ia, oa: Linear(
+            in_dim=i, out_dim=o, in_axis=ia, out_axis=oa, family="ffn",
+            swm=cfg.swm, stack=self.stack, dtype=cfg.param_dtype,
+        )
+        k = lin(d, dff, "embed", "mlp")(params["wk"], xk)
+        k = jnp.square(jax.nn.relu(k))
+        r = jax.nn.sigmoid(lin(d, d, "embed", None)(params["wr"], xr))
+        y = r * lin(dff, d, "mlp", "embed")(params["wv"], k)
+        new_cache = {"shift_ffn": x[:, -1, :]} if cache is not None else None
+        return y, new_cache

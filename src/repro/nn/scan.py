@@ -1,0 +1,53 @@
+"""Chunked time scan with per-chunk rematerialization.
+
+A plain ``lax.scan`` over T timesteps saves its carry at every step for the
+backward pass — for SSM/RWKV states that is T × (B, d_inner, d_state)
+(measured: 17 GB per RWKV layer at T=4096). Scanning chunks-of-steps with a
+checkpointed chunk body saves only T/chunk boundary states and recomputes
+inside each chunk: memory ÷ chunk, forward ×2 during backward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_time_scan"]
+
+
+def chunked_time_scan(
+    step_fn: Callable,
+    carry,
+    xs: Tuple,           # tuple of time-major arrays (T, ...)
+    *,
+    chunk: int = 256,
+    remat: bool = True,
+):
+    """Equivalent to ``lax.scan(step_fn, carry, xs)`` with chunked remat.
+
+    step_fn: (carry, xs_t) -> (carry, y_t). Returns (carry, ys) with ys
+    stacked time-major like lax.scan.
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    chunk = max(1, min(chunk, T))
+    n, tail = divmod(T, chunk)
+    head = jax.tree.map(lambda a: a[: n * chunk], xs)
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), head)
+
+    def chunk_body(carry, xs_chunk):
+        return jax.lax.scan(step_fn, carry, xs_chunk)
+
+    body = jax.checkpoint(chunk_body) if remat else chunk_body
+    carry, ys = jax.lax.scan(body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((n * chunk,) + a.shape[2:]), ys)
+    if tail:   # partial last chunk: plain scan (never padded — padding
+        #        would corrupt the carry with phantom steps)
+        carry, ys_t = jax.lax.scan(
+            step_fn, carry, jax.tree.map(lambda a: a[n * chunk:], xs))
+        ys = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ys, ys_t)
+    return carry, ys

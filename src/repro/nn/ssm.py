@@ -1,0 +1,167 @@
+"""Mamba (selective SSM) block — the jamba hybrid's attention-free mixer.
+
+SWM applicability (DESIGN.md §Arch-applicability): the in/x/dt/out
+*projections* are plain weight GEMMs and are circulant-compressible; the
+selective scan itself (A, Δ recurrence) is not a weight matrix and is left
+untouched.
+
+Training/prefill use a sequential ``lax.scan`` over time with a
+(B, d_inner, d_state) carry — memory-light and compile-fast. (A chunked
+SSD-style matmul scan is the Pallas hot-path candidate; noted in DESIGN.md.)
+Decode carries {conv window, ssm state} in the cache: O(1) per token — this
+is what makes jamba's long_500k cell trivial memory-wise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import Linear
+from repro.nn.module import ParamSpec
+
+__all__ = ["Mamba", "init_mamba_cache"]
+
+
+def init_mamba_cache(batch: int, d_inner: int, d_state: int, d_conv: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba:
+    cfg: ModelConfig
+    stack: Tuple[int, ...] = ()
+
+    @property
+    def d_inner(self) -> int:
+        return self.cfg.mamba_expand * self.cfg.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.cfg.mamba_dt_rank or max(1, self.cfg.d_model // 16)
+
+    def _lin(self, i, o, ia, oa, family="mamba_proj"):
+        return Linear(
+            in_dim=i, out_dim=o, in_axis=ia, out_axis=oa, family=family,
+            swm=self.cfg.swm, stack=self.stack, dtype=self.cfg.param_dtype,
+        )
+
+    @property
+    def in_proj(self):
+        return self._lin(self.cfg.d_model, 2 * self.d_inner, "embed", "mlp",
+                         family="ffn")
+    @property
+    def x_proj(self):
+        return self._lin(self.d_inner, self.dt_rank + 2 * self.cfg.mamba_d_state,
+                         "mlp", None, family="mamba_inner")
+    @property
+    def dt_proj(self):
+        return self._lin(self.dt_rank, self.d_inner, None, "mlp",
+                         family="mamba_inner")
+    @property
+    def out_proj(self):
+        return self._lin(self.d_inner, self.cfg.d_model, "mlp", "embed",
+                         family="ffn")
+
+    def specs(self):
+        di, ds, dc = self.d_inner, self.cfg.mamba_d_state, self.cfg.mamba_d_conv
+        lead = self.stack
+        la = ("layers",) * len(lead)
+        return {
+            "in_proj": self.in_proj.specs(),
+            "x_proj": self.x_proj.specs(),
+            "dt_proj": self.dt_proj.specs(),
+            "dt_bias": ParamSpec(lead + (di,), jnp.float32, la + ("mlp",), init="zeros"),
+            "out_proj": self.out_proj.specs(),
+            "conv_w": ParamSpec(lead + (dc, di), jnp.dtype(self.cfg.param_dtype),
+                                la + (None, "mlp"), init="normal", scale=dc**-0.5),
+            "conv_b": ParamSpec(lead + (di,), jnp.float32, la + ("mlp",), init="zeros"),
+            "A_log": ParamSpec(
+                lead + (di, ds), jnp.float32, la + ("mlp", None),
+                init=lambda key, shape, dtype: jnp.log(
+                    jnp.broadcast_to(jnp.arange(1, shape[-1] + 1, dtype=jnp.float32), shape)
+                ).astype(dtype),
+            ),
+            "D": ParamSpec(lead + (di,), jnp.float32, la + ("mlp",), init="ones"),
+        }
+
+    # ------------------------------------------------------------------
+    def _conv(self, params, x: jax.Array, conv_state: Optional[jax.Array]):
+        """Causal depthwise conv over time. x (B, S, di)."""
+        dc = self.cfg.mamba_d_conv
+        w = params["conv_w"].astype(x.dtype)                 # (dc, di)
+        if conv_state is None:
+            pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+        else:
+            pad = conv_state.astype(x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)               # (B, S+dc-1, di)
+        out = sum(
+            xp[:, i : i + x.shape[1], :] * w[i] for i in range(dc)
+        ) + params["conv_b"].astype(x.dtype)
+        new_state = xp[:, -(dc - 1):, :]
+        return out, new_state
+
+    def __call__(
+        self, params, x: jax.Array, cache: Optional[dict] = None
+    ) -> Tuple[jax.Array, Optional[dict]]:
+        """x (B, S, d) -> (y (B, S, d), new cache)."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        di, ds = self.d_inner, cfg.mamba_d_state
+
+        xz = self.in_proj(params["in_proj"], x)
+        xi, z = jnp.split(xz, 2, axis=-1)                     # (B,S,di) each
+
+        conv_state = cache["conv"] if cache is not None else None
+        xi, new_conv = self._conv(params, xi, conv_state)
+        xi = jax.nn.silu(xi)
+
+        xdb = self.x_proj(params["x_proj"], xi).astype(jnp.float32)
+        dt, Bc, Cc = jnp.split(
+            xdb, [self.dt_rank, self.dt_rank + ds], axis=-1
+        )
+        dt = jax.nn.softplus(
+            self.dt_proj(params["dt_proj"], dt.astype(x.dtype)).astype(jnp.float32)
+            + params["dt_bias"]
+        )                                                     # (B,S,di)
+        A = -jnp.exp(params["A_log"])                         # (di, ds)
+        xf = xi.astype(jnp.float32)
+
+        h0 = (
+            cache["ssm"]
+            if cache is not None
+            else jnp.zeros((B, di, ds), jnp.float32)
+        )
+
+        def step(h, t):
+            dt_t, B_t, C_t, x_t = t                           # (B,di),(B,ds),(B,ds),(B,di)
+            dA = jnp.exp(dt_t[..., None] * A)                 # (B,di,ds)
+            dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]   # (B,di,ds)
+            h = dA * h + dBx
+            y = jnp.einsum("bds,bs->bd", h, C_t)
+            return h, y
+
+        ts = (
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(Bc, 1, 0),
+            jnp.moveaxis(Cc, 1, 0),
+            jnp.moveaxis(xf, 1, 0),
+        )
+        from repro.nn.scan import chunked_time_scan
+        hT, ys = chunked_time_scan(step, h0, ts, chunk=256,
+                                   remat=S > 256)
+        y = jnp.moveaxis(ys, 0, 1) + xf * params["D"]         # (B,S,di)
+        y = (y.astype(x.dtype)) * jax.nn.silu(z)
+        out = self.out_proj(params["out_proj"], y)
+
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": hT}
+        return out, new_cache

@@ -1,0 +1,177 @@
+"""Optimizers: AdamW (configurable moment dtype) and Adafactor (factored v).
+
+State trees mirror the param tree so the sharding rule tables apply leaf-
+for-leaf (dist.sharding.opt_shardings adds the ZeRO-1 'data' extension).
+Spec builders let the dry-run construct optimizer state as ShapeDtypeStructs
+without ever allocating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.nn.module import ParamSpec, map_specs
+
+__all__ = ["adamw_state_specs", "adamw_init", "adamw_update", "lr_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+
+def lr_schedule(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(1, tcfg.warmup_steps), 1.0)
+    t = jnp.clip(
+        (step - tcfg.warmup_steps)
+        / max(1, tcfg.total_steps - tcfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * t))
+    return tcfg.learning_rate * warm * cos
+
+
+def adamw_state_specs(param_specs, tcfg: TrainConfig):
+    """Moment ParamSpecs mirroring the params (for dry-run SDS + sharding)."""
+    mdt = jnp.dtype(tcfg.moment_dtype)
+
+    def mom(path, s: ParamSpec):
+        return ParamSpec(s.shape, mdt, s.axes, init="zeros")
+
+    return {
+        "m": map_specs(mom, param_specs),
+        "v": map_specs(mom, param_specs),
+    }
+
+
+def adamw_init(params, tcfg: TrainConfig):
+    mdt = jnp.dtype(tcfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_update(params, grads, opt, step, tcfg: TrainConfig):
+    """One AdamW step. Math in f32; params/moments cast back to storage dtype."""
+    lr = lr_schedule(tcfg, step)
+    b1, b2, eps, wd = tcfg.b1, tcfg.b2, tcfg.eps, tcfg.weight_decay
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p32)
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moment.
+#
+# For a (…, r, c) parameter the O(r·c) second moment is replaced by row/col
+# accumulators of size O(r + c): the memory that makes AdamW-f32 infeasible
+# for the dense arctic-480b baseline (EXPERIMENTS.md §Dry-run) disappears.
+# State specs are ParamSpec trees (axes preserved minus the reduced dim), so
+# dist.sharding's rule table applies to the factored state unchanged.
+# ---------------------------------------------------------------------------
+
+
+def adafactor_state_specs(param_specs, tcfg: TrainConfig):
+    from repro.nn.module import ParamSpec as PS
+
+    def vr(path, s):      # reduce last dim
+        if len(s.shape) >= 2:
+            return PS(s.shape[:-1], jnp.float32, s.axes[:-1], init="zeros")
+        return PS(s.shape, jnp.float32, s.axes, init="zeros")
+
+    def vc(path, s):      # reduce second-to-last dim
+        if len(s.shape) >= 2:
+            return PS(s.shape[:-2] + s.shape[-1:], jnp.float32,
+                      s.axes[:-2] + s.axes[-1:], init="zeros")
+        return PS((1,), jnp.float32, (None,), init="zeros")
+
+    return {"vr": map_specs(vr, param_specs), "vc": map_specs(vc, param_specs)}
+
+
+def adafactor_init(params, tcfg: TrainConfig):
+    def vr(p):
+        return jnp.zeros(p.shape[:-1] if p.ndim >= 2 else p.shape, jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:] if p.ndim >= 2 else (1,),
+                         jnp.float32)
+
+    return {"vr": jax.tree.map(vr, params), "vc": jax.tree.map(vc, params)}
+
+
+def adafactor_update(params, grads, opt, step, tcfg: TrainConfig):
+    """Factored RMS update (no first moment), decay 1 - t^-0.8, update
+    clipping at RMS 1.0, weight decay as in AdamW."""
+    lr = lr_schedule(tcfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** -0.8
+    eps = 1e-30
+    wd = tcfg.weight_decay
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if p.ndim >= 2:
+            vr_n = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc_n = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            denom = (
+                vr_n[..., :, None] * vc_n[..., None, :]
+                / jnp.maximum(vr_n.mean(-1)[..., None, None], eps)
+            )
+            upd_ = g32 * jax.lax.rsqrt(denom + eps)
+        else:
+            vr_n = beta2 * vr + (1 - beta2) * g2
+            vc_n = vc
+            upd_ = g32 * jax.lax.rsqrt(vr_n + eps)
+        # relative update clipping
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + eps)
+        upd_ = upd_ / jnp.maximum(1.0, rms)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (upd_ + wd * p32)
+        return new_p.astype(p.dtype), vr_n, vc_n
+
+    flat_p, treedef = jax.tree.flatten(params)
+    out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(
+        flat_p, jax.tree.leaves(grads), jax.tree.leaves(opt["vr"]),
+        jax.tree.leaves(opt["vc"]))]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            {"vr": jax.tree.unflatten(treedef, [o[1] for o in out]),
+             "vc": jax.tree.unflatten(treedef, [o[2] for o in out])})

@@ -1,0 +1,96 @@
+"""Serving: prefill / decode step builders and a batched request engine.
+
+``make_prefill_step`` / ``make_decode_step`` produce the jittable functions
+that the dry-run lowers for the ``prefill_*`` and ``decode_*`` / ``long_*``
+shape cells. ``ServeEngine`` is a minimal continuous-batching driver used by
+the serving example: fixed batch slots, greedy sampling, per-slot stop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]
+
+
+def make_prefill_step(model, cfg: ModelConfig):
+    def prefill_step(params, tokens, cache, extra=None):
+        """tokens (B, S) -> (last logits (B, V), filled cache)."""
+        kwargs = {}
+        if cfg.family == "vlm" and extra is not None:
+            kwargs["img_embeds"] = extra
+        if cfg.family == "encdec":
+            logits, new_cache, _ = model.forward(
+                params, extra, tokens, cache=cache, logits_mode="last"
+            )
+            return logits[:, -1], new_cache
+        logits, new_cache, _ = model.forward(
+            params, tokens, cache=cache, logits_mode="last", **kwargs
+        )
+        return logits[:, -1], new_cache
+
+    return prefill_step
+
+
+def make_decode_step(model, cfg: ModelConfig):
+    def decode_step(params, tokens, cache, pos):
+        """tokens (B, 1), pos (B,) -> (logits (B, V), cache)."""
+        return model.decode_step(params, tokens, cache, pos)
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching: each slot independently prefills and
+    decodes; finished slots accept the next queued request."""
+
+    def __init__(self, model, cfg: ModelConfig, params, batch: int,
+                 cache_len: int):
+        self.model, self.cfg, self.params = model, cfg, params
+        self.batch, self.cache_len = batch, cache_len
+        self.prefill = jax.jit(make_prefill_step(model, cfg))
+        self.decode = jax.jit(make_decode_step(model, cfg))
+
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        """Greedy-decode a list of requests in batched waves."""
+        results = []
+        for i in range(0, len(requests), self.batch):
+            wave = requests[i : i + self.batch]
+            results.extend(self._run_wave(wave))
+        return results
+
+    def _run_wave(self, wave: List[Request]) -> List[List[int]]:
+        B = self.batch
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, plen), np.int32)
+        for j, r in enumerate(wave):
+            toks[j, plen - len(r.prompt):] = r.prompt    # left-pad
+        cache = self.model.init_cache(B, self.cache_len)
+        logits, cache = self.prefill(self.params, jnp.asarray(toks), cache)
+        outs = [[] for _ in wave]
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        max_new = max(r.max_new for r in wave)
+        for t in range(max_new):
+            for j, r in enumerate(wave):
+                if t < r.max_new:
+                    outs[j].append(int(cur[j]))
+            pos = jnp.full((B,), plen + t, jnp.int32)
+            logits, cache = self.decode(
+                self.params, cur[:, None], cache, pos
+            )
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        return outs

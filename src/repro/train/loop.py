@@ -1,0 +1,134 @@
+"""Train-step builder: loss (chunked CE + z-loss + MoE aux), grad
+accumulation (microbatching), global-norm clip, AdamW, metrics.
+
+The returned ``train_step(state, batch)`` is a pure jittable function whose
+state is a plain dict pytree ``{"params", "opt": {"m","v"}, "step"}`` —
+shardings for every leaf come from dist.sharding (params rules + ZeRO-1 for
+moments), so the same function lowers on 1 CPU device or a 512-chip mesh.
+
+Microbatched gradient accumulation runs as a ``lax.scan`` over microbatch
+slices; the DP gradient all-reduce of microbatch *i* overlaps with the
+compute of *i+1* under XLA's latency-hiding scheduler (collective is rooted
+inside the scan body).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.optim.optimizers import (adafactor_init, adafactor_update,
+                                    adamw_init, adamw_update,
+                                    clip_by_global_norm, global_norm)
+from repro.train.losses import chunked_cross_entropy
+
+__all__ = ["make_loss_fn", "make_train_step", "init_train_state"]
+
+
+def make_loss_fn(model, cfg: ModelConfig, tcfg: TrainConfig):
+    """batch -> scalar loss. Batch layouts:
+       lm:     {"tokens": (B, S+1)}
+       vlm:    {"tokens": (B, S+1), "img": (B, P, D)}
+       encdec: {"frames": (B, T, D), "tokens": (B, S+1)}
+    """
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        kwargs = {}
+        if cfg.family == "vlm" and "img" in batch:
+            kwargs["img_embeds"] = batch["img"]
+        if cfg.family == "encdec":
+            kwargs["frames"] = batch["frames"]
+        hidden, aux = model.forward_hidden(params, inp, **kwargs)
+        if cfg.family == "vlm" and "img" in batch:
+            hidden = hidden[:, batch["img"].shape[1]:]   # loss on text only
+        table = model.output_table(params)
+        ce, metrics = chunked_cross_entropy(
+            hidden, table, labels, z_loss=tcfg.z_loss
+        )
+        loss = ce + tcfg.moe_aux_loss * aux
+        return loss, {"ce": ce, "aux": aux, **metrics}
+
+    return loss_fn
+
+
+def init_train_state(params, tcfg: TrainConfig, optimizer: str = "adamw"):
+    init = adafactor_init if optimizer == "adafactor" else adamw_init
+    return {
+        "params": params,
+        "opt": init(params, tcfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    loss_fn = make_loss_fn(model, cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            n = tcfg.microbatch
+
+            def split(x):
+                B = x.shape[0]
+                x = x.reshape(n, B // n, *x.shape[1:])
+                if mesh is not None:
+                    # keep DP on the *inner* batch dim — without this GSPMD
+                    # shards the microbatch axis instead (measured: per-chip
+                    # batch stayed at the full 16 on gemma3 train_4k)
+                    from jax.sharding import NamedSharding, PartitionSpec as P
+                    from repro.dist.sharding import data_axes
+                    dp = data_axes(mesh)
+                    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+                    if (B // n) % max(
+                        1, int(__import__("numpy").prod(
+                            [mesh.shape[a] for a in data_axes(mesh)]))
+                    ) == 0:
+                        spec = P(None, dp, *([None] * (x.ndim - 2)))
+                        x = jax.lax.with_sharding_constraint(
+                            x, NamedSharding(mesh, spec))
+                return x
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, acc_g, grads
+                )
+                return (acc_g, acc_l + loss / n), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), metrics = jax.lax.scan(
+                body, (zero, jnp.zeros(())), micro
+            )
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            return loss, metrics, grads
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        update = (adafactor_update if cfg.optimizer == "adafactor"
+                  else adamw_update)
+        new_params, new_opt = update(
+            state["params"], grads, state["opt"], state["step"], tcfg
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,79 @@
+"""Losses. The headline trick is **chunked cross-entropy**: for 262k-vocab
+models the (B, S, V) logits tensor would be TB-scale; instead we scan over
+sequence chunks, computing logits → logsumexp → nll per chunk and keeping
+only scalars, so peak memory is O(B·chunk·V / devices)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_cross_entropy", "softmax_cross_entropy"]
+
+
+def softmax_cross_entropy(logits, labels, mask=None, z_loss: float = 0.0):
+    """logits (..., V) f32, labels (...) int. Returns (mean nll, metrics)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss > 0:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / total, {"tokens": total}
+
+
+def chunked_cross_entropy(
+    hidden: jax.Array,          # (B, S, D) final hidden states
+    table: jax.Array,           # (V, D) tied embedding (or head.T)
+    labels: jax.Array,          # (B, S) int32
+    mask: Optional[jax.Array] = None,   # (B, S) 1=count
+    *,
+    z_loss: float = 0.0,
+    chunk: int = 512,
+) -> Tuple[jax.Array, dict]:
+    """CE where logits are materialized only one sequence-chunk at a time."""
+    B, S, D = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = hidden.shape[1] // chunk
+    # Label logits via ONE row gather of the (sharded) table, outside the
+    # chunk scan: ll = <h, table[label]>. take_along_axis over a
+    # vocab-sharded (B,c,V) logits tensor would force XLA to all-gather
+    # every logits chunk (≈5 GB/device/chunk at 152k vocab) — measured in
+    # the first dry-run and eliminated here (EXPERIMENTS.md §Perf).
+    rows = table[labels]                                    # (B, S', D)
+    hs = jnp.moveaxis(hidden.reshape(B, n, chunk, D), 1, 0)
+    rs = jnp.moveaxis(rows.reshape(B, n, chunk, D), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+    tf = table.astype(jnp.float32)
+
+    @jax.checkpoint        # recompute chunk logits in backward: the scan
+    def body(carry, xs):   # must never stack (n, B, c, V) logits residuals
+        tot, cnt = carry
+        h, r, m = xs
+        h32 = h.astype(jnp.float32)
+        logits = jnp.einsum("bcd,vd->bcv", h32, tf)   # stays vocab-sharded
+        lse = jax.nn.logsumexp(logits, axis=-1)       # sharded reduce
+        ll = jnp.einsum("bcd,bcd->bc", h32, r.astype(jnp.float32))
+        nll = lse - ll
+        if z_loss > 0:
+            nll = nll + z_loss * jnp.square(lse)
+        mf = m.astype(jnp.float32)
+        return (tot + (nll * mf).sum(), cnt + mf.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, rs, ms))
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt, {"tokens": cnt}

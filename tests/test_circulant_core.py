@@ -1,0 +1,189 @@
+"""Core SWM math: every implementation vs the dense oracle + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import circulant as C
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("impl", ["paper", "freq", "dft"])
+@pytest.mark.parametrize("p,q,k", [(3, 5, 8), (2, 2, 128), (1, 3, 64),
+                                   (4, 4, 16), (2, 2, 2), (2, 3, 5)])
+def test_impls_match_dense(impl, p, q, k):
+    w = _rand((p, q, k))
+    x = _rand((4, q * k), seed=1)
+    y_ref = x @ C.blocks_to_dense(w).T
+    y = C.block_circulant_apply(x, w, impl=impl)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_karatsuba_matches():
+    w, x = _rand((3, 4, 16)), _rand((5, 64), seed=2)
+    y0 = C.block_circulant_matvec_dft(x, w, karatsuba=False)
+    y1 = C.block_circulant_matvec_dft(x, w, karatsuba=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_frozen_freq_weights():
+    """The paper stores FFT(w) in BRAM — frozen path must equal live path."""
+    w, x = _rand((2, 3, 8)), _rand((4, 24), seed=3)
+    wf = jnp.fft.rfft(w, axis=-1)
+    y0 = C.block_circulant_matvec_freq(x, w)
+    y1 = C.block_circulant_matvec_freq(x, None, w_freq=wf)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-6)
+
+
+def test_lstsq_projection_roundtrip():
+    w = _rand((3, 2, 8))
+    W = C.blocks_to_dense(w)
+    np.testing.assert_allclose(
+        np.asarray(C.dense_to_blocks_lstsq(W, 8)), np.asarray(w), atol=1e-6
+    )
+
+
+def test_lstsq_is_frobenius_projection():
+    """Projection residual must be orthogonal to the circulant subspace."""
+    W = _rand((8, 8), seed=7)
+    wb = C.dense_to_blocks_lstsq(W, 4)
+    proj = C.blocks_to_dense(wb)
+    resid = np.asarray(W - proj)
+    # inner product of residual with any circulant basis element == 0
+    for d in range(4):
+        basis = np.zeros((4, 4))
+        for a in range(4):
+            basis[a, (a - d) % 4] = 1.0
+        big = np.kron(np.ones((2, 2)), basis) * 0
+        for i in range(2):
+            for j in range(2):
+                blk = resid[i * 4:(i + 1) * 4, j * 4:(j + 1) * 4]
+                assert abs((blk * basis).sum()) < 1e-4
+
+
+@given(st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from([2, 4, 8, 16]), st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_linearity_property(p, q, k, batch):
+    """f(ax+by) == a f(x) + b f(y): the layer is exactly linear."""
+    w = _rand((p, q, k))
+    x = _rand((batch, q * k), seed=4)
+    y = _rand((batch, q * k), seed=5)
+    f = lambda v: C.block_circulant_apply(v, w, impl="freq")
+    lhs = f(2.0 * x - 3.0 * y)
+    rhs = 2.0 * f(x) - 3.0 * f(y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.sampled_from([2, 4, 8]))
+@settings(max_examples=15, deadline=None)
+def test_composition_is_matmul_property(p, q, k):
+    """Composing two SWM layers == product of their dense expansions."""
+    w1 = _rand((p, q, k), seed=1)
+    w2 = _rand((q, p, k), seed=2)
+    x = _rand((2, q * k), seed=3)
+    y = C.block_circulant_apply(
+        C.block_circulant_apply(x, w1, impl="freq"), w2, impl="freq")
+    W = C.blocks_to_dense(w2) @ C.blocks_to_dense(w1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W.T),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_valid_block_size():
+    assert C.valid_block_size(128, 11008, 4096) == 128
+    assert C.valid_block_size(128, 300, 200) == 100
+    assert C.valid_block_size(64, 64, 10) == 2
+    assert C.valid_block_size(0, 64, 64) == 1
+    assert C.valid_block_size(7, 49, 21) == 7
+
+
+def test_storage_and_flops_accounting():
+    """O(n²)→O(n) storage and ~k/4 FLOP cut (paper §3)."""
+    m = n = 1024
+    k = 64
+    dense_params = m * n
+    swm_params = (m // k) * (n // k) * k
+    assert dense_params / swm_params == k
+    f_dense = C.dense_flops(1, m, n)
+    f_swm = C.swm_flops(1, m, n, k, impl="freq")
+    assert f_dense / f_swm > k / 8  # comfortably super-linear reduction
+    # paper dataflow does p×q IFFTs (more transforms than freq-accumulated)
+    assert C.swm_flops(1, m, n, k, "paper") > C.swm_flops(1, m, n, k, "freq")
+
+
+def test_gradients_match_dense():
+    w = _rand((2, 3, 8))
+    x = _rand((4, 24), seed=9)
+    for impl in ("paper", "freq", "dft"):
+        g_impl = jax.grad(
+            lambda w: (C.block_circulant_apply(x, w, impl=impl) ** 2).sum()
+        )(w)
+        g_ref = jax.grad(
+            lambda w: ((x @ C.blocks_to_dense(w).T) ** 2).sum()
+        )(w)
+        np.testing.assert_allclose(np.asarray(g_impl), np.asarray(g_ref),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_freq_shmap_matches_without_mesh():
+    """impl='freq_shmap' degrades to the plain path when no mesh is set."""
+    from repro.dist.sharding import set_ambient_mesh
+    set_ambient_mesh(None)
+    w = _rand((3, 5, 8))
+    x = _rand((4, 40), seed=11)
+    y0 = C.block_circulant_apply(x, w, impl="freq")
+    y1 = C.block_circulant_apply(x, w, impl="freq_shmap")
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-6)
+
+
+def test_dft_custom_vjp_matches_karatsuba_grads():
+    w = _rand((2, 3, 8))
+    x = _rand((4, 24), seed=12)
+    t = _rand((4, 16), seed=13)
+    g0 = jax.grad(lambda w: (C.block_circulant_apply(x, w, impl="dft") * t).sum())(w)
+    g1 = jax.grad(lambda w: (C.block_circulant_apply(
+        x, w, impl="dft", karatsuba=True) * t).sum())(w)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_fused_pair_matches_separate():
+    """wi/wu fused pair op (shared forward DFT) == two separate applies."""
+    w1 = _rand((3, 5, 8), seed=20)
+    w2 = _rand((4, 5, 8), seed=21)
+    x = _rand((6, 40), seed=22)
+    y1, y2 = C.block_circulant_apply_pair(x, w1, w2)
+    np.testing.assert_allclose(
+        np.asarray(y1), np.asarray(C.block_circulant_apply(x, w1, impl="dft")),
+        rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(y2), np.asarray(C.block_circulant_apply(x, w2, impl="dft")),
+        rtol=1e-4, atol=1e-5)
+    # grads via the pair VJP vs dense autodiff
+    t1 = _rand((6, 24), seed=23)
+    t2 = _rand((6, 32), seed=24)
+
+    def loss_pair(x, w1, w2):
+        a, b = C.block_circulant_apply_pair(x, w1, w2)
+        return (a * t1).sum() + (b * t2).sum()
+
+    def loss_ref(x, w1, w2):
+        a = x @ C.blocks_to_dense(w1).T
+        b = x @ C.blocks_to_dense(w2).T
+        return (a * t1).sum() + (b * t2).sum()
+
+    gp = jax.grad(loss_pair, (0, 1, 2))(x, w1, w2)
+    gr = jax.grad(loss_ref, (0, 1, 2))(x, w1, w2)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)

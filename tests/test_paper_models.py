@@ -1,0 +1,95 @@
+"""Paper's own models: circulant conv oracle, SWM-LSTM, quantization STE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SWMConfig
+from repro.core.conv import CirculantConv2D
+from repro.core.lstm import SWMLSTM
+from repro.core.quant import fixed_point, quantize_tree
+from repro.models.paper_models import ASICNet, SWMCNN, SWMLSTMASR, SWMMLP
+from repro.nn.module import flatten_with_paths, init_params, param_count
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_circulant_conv_matches_dense_expansion():
+    """k>1 conv must equal a dense conv whose taps are circulant blocks."""
+    conv = CirculantConv2D(in_ch=8, out_ch=8, ksize=3, block_size=4)
+    params = init_params(conv.specs(), 0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 10, 8))
+    y = conv(params, x)
+    # dense expansion of each tap's block table
+    from repro.core.circulant import blocks_to_dense
+    w = params["w"]                                    # (9, p, q, k)
+    taps = [blocks_to_dense(w[t]) for t in range(9)]   # each (P, C)
+    patches = jnp.stack(
+        [x[:, i:i + 8, j:j + 8, :] for i in range(3) for j in range(3)],
+        axis=3)
+    y_ref = jnp.einsum("bhwtc,tpc->bhwp", patches,
+                       jnp.stack(taps)) + params["b"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_conv_param_reduction():
+    dense = CirculantConv2D(in_ch=16, out_ch=16, ksize=3, block_size=1)
+    swm = CirculantConv2D(in_ch=16, out_ch=16, ksize=3, block_size=8)
+    assert param_count(dense.specs()) > 7 * param_count(swm.specs())
+
+
+def test_swm_lstm_shapes_and_state():
+    cell = SWMLSTM(d_in=24, d_cell=32, d_proj=16,
+                   swm=SWMConfig(block_size=8, targets=("lstm",)))
+    params = init_params(cell.specs(), 0)
+    xs = jax.random.normal(jax.random.PRNGKey(0), (3, 10, 24))
+    ys, (yT, cT) = cell(params, xs)
+    assert ys.shape == (3, 10, 16) and cT.shape == (3, 32)
+    assert bool(jnp.isfinite(ys).all())
+    # stepwise equals scan
+    y, c = jnp.zeros((3, 16)), jnp.zeros((3, 32))
+    for t in range(10):
+        y, c = cell.step(params, xs[:, t], y, c)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ys[:, t]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_compression_matches_paper_ratios():
+    """Gate matrices are k× smaller; whole-model ratio between 1 and k."""
+    dense = param_count(SWMLSTMASR(block_size=0).specs())
+    for k, lo in ((8, 5.0), (16, 8.0)):
+        n = param_count(SWMLSTMASR(block_size=k).specs())
+        assert dense / n > lo, (k, dense / n)
+
+
+def test_fixed_point_quantization():
+    x = jnp.asarray([0.1234567, -1.5, 100.0, -100.0])
+    q = fixed_point(x, bits=12, frac_bits=8)
+    # representable grid 1/256, clipped to ±(2^11)/256 = ±8
+    assert float(q[2]) == pytest.approx(2047 / 256)
+    assert float(q[3]) == pytest.approx(-2048 / 256)
+    np.testing.assert_allclose(float(q[0]), round(0.1234567 * 256) / 256)
+    # straight-through gradient
+    g = jax.grad(lambda x: fixed_point(x, 12, 8).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+def test_asic_net_structure():
+    """Table 2: weight structure 8×8×64 / 8×8×64 / 1×8×64 / dense 64×10."""
+    net = ASICNet()
+    shapes = [s.shape for p, s in flatten_with_paths(net.specs())
+              if p[-1] == "w"]
+    assert (8, 8, 64) in shapes and (1, 8, 64) in shapes
+    assert (64, 10) in shapes          # output layer stays dense (paper)
+    params = init_params(net.specs(), 0)
+    y = net(params, jax.random.normal(jax.random.PRNGKey(0), (4, 512)))
+    assert y.shape == (4, 10) and bool(jnp.isfinite(y).all())
+
+
+def test_cnn_forward():
+    cnn = SWMCNN()
+    params = init_params(cnn.specs(), 0)
+    y = cnn(params, jax.random.normal(jax.random.PRNGKey(0), (2, 28, 28, 1)))
+    assert y.shape == (2, 10) and bool(jnp.isfinite(y).all())

@@ -1,0 +1,74 @@
+"""Sharding-rule unit tests (mesh mocked — no 512 devices needed here;
+the real multi-device pass is launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.nn.module import ParamSpec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _pspec(axes, shape, mesh=MESH1, fsdp=False):
+    rules = sh.make_param_rules(mesh, fsdp)
+    return sh.spec_to_pspec(axes, shape, rules, mesh)
+
+
+def test_tp_rules():
+    assert _pspec(("embed", "mlp"), (4096, 16384)) == P(None, "model")
+    assert _pspec(("mlp", "embed"), (16384, 4096)) == P("model", None)
+    assert _pspec(("vocab", "embed"), (151936, 1024)) == P("model", None)
+
+
+def test_circulant_tables_inherit_dense_axes():
+    # (p, q, k) with (out=mlp, in=embed, None)
+    assert _pspec(("mlp", "embed", None), (128, 32, 128)) == P("model", None, None)
+
+
+def test_non_divisible_dims_dropped():
+    # 92544 % 16 == 0 but 10 % 16 != 0 -> dropped
+    assert _pspec(("vocab", None), (10, 4)) == P(None, None)
+    # kv_heads = 8 not divisible by model=16 -> replicated
+    assert _pspec(("embed", "kv_heads"), (1024, 8)) == P(None, None)
+
+
+def test_axis_never_reused():
+    spec = _pspec(("experts", "embed", "mlp"), (128, 7168, 4864))
+    # experts takes 'model'; mlp cannot reuse it
+    assert spec == P("model", None, None)
+
+
+def test_fsdp_adds_data_axis():
+    spec = _pspec(("experts", "embed", "mlp"), (128, 7168, 4864), fsdp=True)
+    assert spec == P("model", "data", None)
+
+
+def test_multipod_batch_axes():
+    assert sh.data_axes(MESH2) == ("pod", "data")
+    bp = sh.batch_pspec(MESH2, 2, batch=256)
+    assert bp == P(("pod", "data"), None)
+    # batch=1 (long_500k): replicate
+    assert sh.batch_pspec(MESH2, 2, batch=1) == P(None, None)
+
+
+def test_zero1_extends_moments():
+    import jax.numpy as jnp
+    import jax
+
+    mesh = None
+    # need a real mesh for NamedSharding; single-device (1,1) still
+    # exercises the pspec construction path
+    mesh = __import__("jax").make_mesh((1, 1), ("data", "model"))
+    specs = {"w": ParamSpec((64, 128), jnp.float32, ("embed", "mlp"))}
+    shards = sh.opt_shardings(mesh, specs, zero1=True)
+    assert "data" in str(shards["w"].spec)
