@@ -52,6 +52,8 @@ __all__ = [
     "block_circulant_matvec_freq",
     "block_circulant_matvec_dft",
     "block_circulant_apply",
+    "block_circulant_apply_fused",
+    "block_circulant_apply_multi",
     "dft_bases",
     "valid_block_size",
     "swm_flops",
@@ -186,12 +188,13 @@ def block_circulant_matvec_paper(
 
 def block_circulant_matvec_freq(
     x: jax.Array, w: jax.Array, *, w_freq: Optional[jax.Array] = None,
-    shmap: bool = False,
+    k: Optional[int] = None, shmap: bool = False,
 ) -> jax.Array:
     """Frequency-domain accumulation (beyond-paper): one IFFT per output block.
 
     ``y_i = IFFT( Σ_j ŵ_ij ∘ x̂_j )``. ``w_freq`` (p, q, K) complex may be
-    passed to use frozen precomputed weights (inference; the paper's BRAM).
+    passed to use frozen precomputed weights (inference; the paper's BRAM) —
+    pass ``k`` alongside when w is None (K alone is ambiguous for odd k).
     ``shmap=True`` runs the activation FFTs shard-locally over the DP axes
     (see _sharded_fft) — the faithful O(n log n) dataflow, distributable.
     """
@@ -200,7 +203,8 @@ def block_circulant_matvec_freq(
         w_freq = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)
     else:
         p, q = w_freq.shape[:2]
-        k = (w_freq.shape[-1] - 1) * 2
+        if k is None:
+            k = (w_freq.shape[-1] - 1) * 2 if w is None else w.shape[-1]
     xb = _split_blocks(x, k).astype(jnp.float32)
     fwd = lambda a: jnp.fft.rfft(a, axis=-1)
     xh = _sharded_fft(fwd, xb) if shmap else fwd(xb)       # (..., q, K)
@@ -457,6 +461,133 @@ def block_circulant_apply(
 
         return bc_ops.block_circulant_matmul(x, w)
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def _epilogue(y: jax.Array, bias: Optional[jax.Array], activation: str
+              ) -> jax.Array:
+    from repro.kernels.block_circulant.kernel import apply_activation
+
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return apply_activation(y, activation)
+
+
+def block_circulant_apply_fused(
+    x: jax.Array,
+    w: Optional[jax.Array],
+    *,
+    impl: str = "freq",
+    bias: Optional[jax.Array] = None,
+    activation: str = "none",
+    w_freq: Optional[Tuple[jax.Array, jax.Array]] = None,
+    k: Optional[int] = None,
+    karatsuba: bool = False,
+) -> jax.Array:
+    """One projection with the bias/activation epilogue and (optionally)
+    frozen frequency weights ``w_freq=(wr, wi)``.
+
+    * ``impl='pallas'`` — everything fuses into the kernel (epilogue runs in
+      VMEM before writeback; frozen weights skip rfft(w) entirely).
+    * other impls — frozen weights route through the freq path (the paper's
+      BRAM-resident FFT(w)); epilogue is a trailing XLA elementwise (fused
+      by XLA itself).
+    """
+    if impl == "pallas":
+        from repro.kernels.block_circulant import ops as bc_ops
+
+        return bc_ops.block_circulant_matmul(
+            x, w, bias=bias, activation=activation, w_freq=w_freq, k=k
+        )
+    if w_freq is not None:
+        wr, wi = w_freq
+        lead = x.shape[:-1]
+        y = block_circulant_matvec_freq(
+            x.reshape(-1, x.shape[-1]), w,
+            w_freq=(wr + 1j * wi).astype(jnp.complex64), k=k,
+        )
+        y = y.reshape(*lead, y.shape[-1])
+    else:
+        y = block_circulant_apply(x, w, impl=impl, karatsuba=karatsuba)
+    return _epilogue(y, bias, activation)
+
+
+def concat_biases(splits, biases, k: int) -> Optional[jax.Array]:
+    """Stack per-projection biases along the fused p axis (None -> zeros).
+
+    Single source of truth for the stacked-p bias convention, shared by the
+    XLA multi path here, ``ops.block_circulant_matmul_multi`` and
+    ``plan.build_multi_plan``.
+    """
+    if biases is None or not any(b is not None for b in biases):
+        return None
+    parts = [
+        (jnp.zeros((p * k,), jnp.float32) if b is None
+         else b.reshape(-1).astype(jnp.float32))
+        for p, b in zip(splits, biases)
+    ]
+    return jnp.concatenate(parts)
+
+
+def split_outputs(y: jax.Array, splits, k: int):
+    """Slice a fused (..., Σp_i·k) output back into per-projection outputs."""
+    outs = []
+    off = 0
+    for p in splits:
+        outs.append(y[..., off: off + p * k])
+        off += p * k
+    return outs
+
+
+def block_circulant_apply_multi(
+    x: jax.Array,
+    ws,
+    *,
+    impl: str = "freq",
+    biases=None,
+    activation: str = "none",
+    w_freqs=None,
+    k: Optional[int] = None,
+    karatsuba: bool = False,
+):
+    """N projections sharing one input -> one stacked-p launch, any impl.
+
+    Tables concatenate along p (they must share (q, k)), so the shared
+    input is transformed once and a single contraction/kernel serves every
+    projection — C-LSTM's fused gate dataflow, applied to LSTM gates and
+    attention QKV. Returns the per-projection outputs (split back). Pass
+    ``k`` when ws is None and the block size is odd (K is ambiguous).
+    """
+    if impl == "pallas":
+        from repro.kernels.block_circulant import ops as bc_ops
+
+        return bc_ops.block_circulant_matmul_multi(
+            x, ws, biases=biases, activation=activation, w_freqs=w_freqs,
+            k=k,
+        )
+    if w_freqs is not None:
+        ps = [wr.shape[0] for wr, _ in w_freqs]
+        if k is None:
+            k = (ws[0].shape[-1] if ws is not None
+                 else 2 * (w_freqs[0][0].shape[-1] - 1))
+        wf_cat = jnp.concatenate(
+            [(wr + 1j * wi).astype(jnp.complex64) for wr, wi in w_freqs],
+            axis=0,
+        )
+        lead = x.shape[:-1]
+        y = block_circulant_matvec_freq(
+            x.reshape(-1, x.shape[-1]), None, w_freq=wf_cat, k=k
+        ).reshape(*lead, -1)
+    else:
+        ps = [w.shape[0] for w in ws]
+        k = ws[0].shape[-1]
+        y = block_circulant_apply(
+            x, jnp.concatenate(list(ws), axis=0), impl=impl,
+            karatsuba=karatsuba,
+        )
+    return [
+        _epilogue(o, biases[i] if biases is not None else None, activation)
+        for i, o in enumerate(split_outputs(y, ps, k))
+    ]
 
 
 # ---------------------------------------------------------------------------

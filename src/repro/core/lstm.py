@@ -6,6 +6,16 @@ never circulant — they are already O(n)); projection W_ym to d_proj.
 
 All eight gate matrices and the projection are block-circulant with block
 size k (paper §6.1: FFT8 → 0.32% PER loss, FFT16 → 1.23%).
+
+Gate fusion (C-LSTM, arXiv:1803.06305): the four gates read the SAME
+``[x_t ; y_{t-1}]`` input, so their eight block tables concatenate — per
+gate along q (x-source ++ recurrent-source) and across gates along p — into
+one (4·dc/k, (di+dp)/k, k) table executed as ONE stacked-p launch per step
+(``core.circulant.block_circulant_apply_multi``) with the gate biases fused
+into the kernel epilogue. Peepholes and the sigmoids stay outside (they mix
+in c, which doesn't exist until after the f/i gates). Falls back to the
+8-launch path when the x- and recurrent-side block sizes differ or SWM is
+off. Frozen frequency weights (serve path) concatenate the same way.
 """
 
 from __future__ import annotations
@@ -17,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SWMConfig
+from repro.core import circulant as circ
 from repro.nn.linear import Linear
 from repro.nn.module import ParamSpec
 
@@ -48,15 +59,59 @@ class SWMLSTM:
         s["Wym"] = self._lin(dc, dp).specs()
         return s
 
+    @property
+    def _fused_gate_k(self) -> int:
+        """Block size for the fused 8-matrix gate launch; 0 = not fusable."""
+        kx = self._lin(self.d_in, self.d_cell).block_size
+        kr = self._lin(self.d_proj, self.d_cell).block_size
+        return kx if (kx > 1 and kx == kr) else 0
+
+    def _fused_gate_preacts(self, params, x_t, y_prev):
+        """[x_t ; y_prev] through ONE stacked (4·dc, di+dp) circulant launch.
+
+        Returns the four gate pre-activations (bias fused, peepholes not)."""
+        xy = jnp.concatenate([x_t, y_prev], axis=-1)
+        gates = ("i", "f", "c", "o")
+        pairs = [(params[f"W{g}x"], params[f"W{g}r"]) for g in gates]
+        frozen = all("wr" in px and "wi" in px and "wr" in pr and "wi" in pr
+                     for px, pr in pairs)
+        if frozen:
+            # frequency tables only; time-domain concats would be dead code
+            ws = None
+            w_freqs = [
+                (jnp.concatenate([px["wr"], pr["wr"]], axis=1),
+                 jnp.concatenate([px["wi"], pr["wi"]], axis=1))
+                for px, pr in pairs
+            ]
+        else:
+            ws = [jnp.concatenate([px["w"], pr["w"]], axis=1)
+                  for px, pr in pairs]
+            w_freqs = None
+        biases = [params[f"b{g}"] for g in gates]
+        return circ.block_circulant_apply_multi(
+            xy, ws, biases=biases, impl=self.swm.impl, w_freqs=w_freqs,
+            k=self._fused_gate_k, karatsuba=self.swm.karatsuba,
+        )
+
     def step(self, params, x_t, y_prev, c_prev):
         """One LSTM step (eq. 1a–1g). Shapes: x (B,di), y (B,dp), c (B,dc)."""
-        lin_x = lambda g: self._lin(self.d_in, self.d_cell)(params[f"W{g}x"], x_t)
-        lin_r = lambda g: self._lin(self.d_proj, self.d_cell)(params[f"W{g}r"], y_prev)
-        i = jax.nn.sigmoid(lin_x("i") + lin_r("i") + params["Wic"] * c_prev + params["bi"])
-        f = jax.nn.sigmoid(lin_x("f") + lin_r("f") + params["Wfc"] * c_prev + params["bf"])
-        g = jax.nn.sigmoid(lin_x("c") + lin_r("c") + params["bc"])
-        c = f * c_prev + g * i
-        o = jax.nn.sigmoid(lin_x("o") + lin_r("o") + params["Woc"] * c + params["bo"])
+        if self._fused_gate_k:
+            pre_i, pre_f, pre_c, pre_o = self._fused_gate_preacts(
+                params, x_t, y_prev
+            )
+            i = jax.nn.sigmoid(pre_i + params["Wic"] * c_prev)
+            f = jax.nn.sigmoid(pre_f + params["Wfc"] * c_prev)
+            g = jax.nn.sigmoid(pre_c)
+            c = f * c_prev + g * i
+            o = jax.nn.sigmoid(pre_o + params["Woc"] * c)
+        else:
+            lin_x = lambda g: self._lin(self.d_in, self.d_cell)(params[f"W{g}x"], x_t)
+            lin_r = lambda g: self._lin(self.d_proj, self.d_cell)(params[f"W{g}r"], y_prev)
+            i = jax.nn.sigmoid(lin_x("i") + lin_r("i") + params["Wic"] * c_prev + params["bi"])
+            f = jax.nn.sigmoid(lin_x("f") + lin_r("f") + params["Wfc"] * c_prev + params["bf"])
+            g = jax.nn.sigmoid(lin_x("c") + lin_r("c") + params["bc"])
+            c = f * c_prev + g * i
+            o = jax.nn.sigmoid(lin_x("o") + lin_r("o") + params["Woc"] * c + params["bo"])
         m = o * jnp.tanh(c)
         y = self._lin(self.d_cell, self.d_proj)(params["Wym"], m)
         return y, c

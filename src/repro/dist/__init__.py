@@ -1,0 +1,1 @@
+"""Distribution utilities: sharding rule tables and gradient compression."""

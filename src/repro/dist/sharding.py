@@ -1,0 +1,208 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD), one table for everything.
+
+Every parameter declares *logical* axis names (:class:`repro.nn.module.ParamSpec`);
+this module maps them onto physical mesh axes:
+
+  * TP rules: ``mlp`` / ``heads`` / ``kv_heads`` / ``vocab`` / ``experts``
+    prefer the ``model`` axis (column-/row-parallel). Circulant block tables
+    carry the same logical names on their (p, q) dims, so SWM layers inherit
+    dense TP behavior unchanged.
+  * FSDP: ``embed`` additionally shards over the ``data`` axis.
+  * ZeRO-1: optimizer moments extend the param spec with the ``data`` axis on
+    the first still-replicated, divisible dim.
+  * A mesh axis is never assigned twice within one tensor, and an assignment
+    is dropped whenever the dim is not divisible by the mesh-axis size (the
+    GSPMD-legal subset — see tests/test_sharding.py).
+
+An *ambient mesh* (set by the launchers) lets deep call sites — activation
+constraints in the decoder, shard-local FFTs in core.circulant — pick up the
+production mesh without threading it through every signature.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.nn.module import ParamSpec, map_specs
+
+__all__ = [
+    "data_axes",
+    "batch_pspec",
+    "make_param_rules",
+    "make_act_rules",
+    "spec_to_pspec",
+    "param_shardings",
+    "opt_shardings",
+    "set_ambient_mesh",
+    "constrain_batch_leading",
+    "_AMBIENT_MESH",
+]
+
+# Data-parallel mesh axes, in nesting order (multi-pod meshes lead with pod).
+_DP_NAMES = ("pod", "data")
+
+# Logical axes that prefer the tensor-parallel 'model' axis.
+_TP_LOGICAL = ("experts", "mlp", "heads", "kv_heads", "vocab")
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The mesh's data-parallel axes, in mesh order (e.g. ('pod', 'data'))."""
+    return tuple(a for a in mesh.axis_names if a in _DP_NAMES)
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)] or [1]))
+
+
+def batch_pspec(mesh, ndim: int, batch: Optional[int] = None) -> P:
+    """PartitionSpec sharding the leading (batch) dim over the DP axes.
+
+    ``batch`` (when known) gates divisibility: batch=1 cells (long_500k)
+    replicate instead of producing an invalid sharding.
+    """
+    dp = data_axes(mesh)
+    if not dp or (batch is not None and batch % _dp_size(mesh) != 0):
+        return P(*([None] * ndim))
+    lead = dp if len(dp) > 1 else dp[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def make_param_rules(mesh, fsdp: bool = False,
+                     low_tp: bool = False) -> Dict[str, object]:
+    """Logical axis -> preferred mesh axis (or axis tuple) for parameters."""
+    rules: Dict[str, object] = {}
+    if "model" in mesh.axis_names:
+        tp = _TP_LOGICAL if not low_tp else ("experts",)
+        for name in tp:
+            rules[name] = "model"
+    if fsdp:
+        dp = data_axes(mesh)
+        if dp:
+            rules["embed"] = dp if len(dp) > 1 else dp[0]
+    return rules
+
+
+def make_act_rules(mesh) -> Dict[str, object]:
+    """Logical axis -> mesh axis for *activations* (batch over DP, TP dims
+    matching the param table so layer outputs land pre-sharded)."""
+    rules: Dict[str, object] = {}
+    dp = data_axes(mesh)
+    if dp:
+        rules["batch"] = dp if len(dp) > 1 else dp[0]
+    if "model" in mesh.axis_names:
+        for name in ("mlp", "heads", "kv_heads"):
+            rules[name] = "model"
+    return rules
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def spec_to_pspec(axes, shape, rules: Dict[str, object], mesh) -> P:
+    """Assign mesh axes dim-by-dim: honor the rule table, never reuse a mesh
+    axis within a tensor, drop assignments on non-divisible dims."""
+    used = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        axis = rules.get(name) if name is not None else None
+        if axis is None:
+            entries.append(None)
+            continue
+        flat = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+        if (any(a in used for a in flat)
+                or any(a not in mesh.axis_names for a in flat)
+                or dim % _axis_size(mesh, axis) != 0):
+            entries.append(None)
+            continue
+        used.update(flat)
+        entries.append(axis if not isinstance(axis, list) else tuple(axis))
+    return P(*entries)
+
+
+def param_shardings(mesh, specs, *, fsdp: bool = False,
+                    low_tp: bool = False):
+    """ParamSpec tree -> NamedSharding tree under the param rule table."""
+    rules = make_param_rules(mesh, fsdp, low_tp)
+    return map_specs(
+        lambda path, s: NamedSharding(
+            mesh, spec_to_pspec(s.axes, s.shape, rules, mesh)
+        ),
+        specs,
+    )
+
+
+def opt_shardings(mesh, specs, *, fsdp: bool = False, low_tp: bool = False,
+                  zero1: bool = True):
+    """Optimizer-moment shardings: the param spec, ZeRO-1-extended.
+
+    ZeRO-1 shards each moment over the DP axes on the first dim that is
+    still replicated and divisible — moments never need to be resident
+    full-size on every data replica.
+    """
+    rules = make_param_rules(mesh, fsdp, low_tp)
+    dp = data_axes(mesh)
+    dp_entry = (dp if len(dp) > 1 else dp[0]) if dp else None
+    dp_size = _dp_size(mesh)
+
+    def one(path, s: ParamSpec):
+        base = list(spec_to_pspec(s.axes, s.shape, rules, mesh))
+        base += [None] * (len(s.shape) - len(base))
+        if zero1 and dp_entry is not None:
+            used = set()
+            for e in base:
+                used.update(e if isinstance(e, tuple) else (e,))
+            if not (set(dp) & used):
+                for i, (e, dim) in enumerate(zip(base, s.shape)):
+                    if e is None and dim % dp_size == 0 and dim > 1:
+                        base[i] = dp_entry
+                        break
+                else:
+                    # all dims taken or non-divisible (incl. dim==1 moments
+                    # on a 1-sized DP mesh): fall back to the first free
+                    # divisible dim regardless of size
+                    for i, (e, dim) in enumerate(zip(base, s.shape)):
+                        if e is None and dim % dp_size == 0:
+                            base[i] = dp_entry
+                            break
+        return NamedSharding(mesh, P(*base))
+
+    return map_specs(one, specs)
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh
+# ---------------------------------------------------------------------------
+
+# Single-element mutable cell so deep call sites can read the production mesh
+# without signature plumbing; [None] means "no mesh registered" (unit tests,
+# single-host examples).
+_AMBIENT_MESH = [None]
+
+
+def set_ambient_mesh(mesh) -> None:
+    """Register (or clear, with None) the process-wide production mesh."""
+    _AMBIENT_MESH[0] = mesh
+
+
+def constrain_batch_leading(x):
+    """with_sharding_constraint(P(dp, None, ...)) under the ambient mesh.
+
+    No-op when no mesh is registered or the leading dim is not divisible —
+    safe to call unconditionally from model code.
+    """
+    mesh = _AMBIENT_MESH[0]
+    if mesh is None:
+        return x
+    dp = data_axes(mesh)
+    if not dp or x.shape[0] % _dp_size(mesh) != 0:
+        return x
+    import jax
+
+    spec = batch_pspec(mesh, x.ndim, batch=x.shape[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,3 +1,15 @@
-from repro.kernels.block_circulant.ops import block_circulant_matmul
+from repro.kernels.block_circulant.ops import (block_circulant_matmul,
+                                               block_circulant_matmul_multi,
+                                               freq_weights)
+from repro.kernels.block_circulant.plan import (BCPlan, build_multi_plan,
+                                                build_plan, freeze_params)
 
-__all__ = ["block_circulant_matmul"]
+__all__ = [
+    "block_circulant_matmul",
+    "block_circulant_matmul_multi",
+    "freq_weights",
+    "BCPlan",
+    "build_plan",
+    "build_multi_plan",
+    "freeze_params",
+]

@@ -18,7 +18,16 @@ TPU adaptation of the paper's FPGA/ASIC dataflow (§5):
                                           double-buffers the next (x, w) tiles
                                           while the MXU consumes the current.
   IFFT + bias/activation peripheral   →   inverse rDFT matmul fused into the
-                                          same kernel on the final q step.
+                                          same kernel on the final q step,
+                                          followed by the fused epilogue
+                                          (bias add + activation) before the
+                                          VMEM→HBM writeback.
+  One pipeline per gate matrix        →   stacked-p multi-projection: several
+                                          projections sharing one input (LSTM
+                                          gates, attention QKV) concatenate
+                                          their frequency tables along p and
+                                          run as ONE kernel launch (see
+                                          ops.block_circulant_matmul_multi).
 
 Grid: ``(B/bB, p/pt, q/qt)`` with q innermost, so the frequency-domain
 accumulator lives in VMEM scratch across the contraction.
@@ -34,18 +43,65 @@ against ``ref.block_circulant_matmul_ref`` over shape/dtype sweeps.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bc_matmul_pallas", "choose_blocks"]
+__all__ = ["bc_matmul_pallas", "choose_blocks", "choose_batch_block",
+           "vmem_estimate", "ACTIVATIONS", "apply_activation"]
+
+# Epilogue activations fused into the final-q writeback (the paper's
+# IFFT + peripheral stage). Keys are the only legal `activation=` values.
+ACTIVATIONS = ("none", "relu", "tanh", "sigmoid", "gelu")
+
+
+def apply_activation(z: jax.Array, activation: str) -> jax.Array:
+    """Elementwise epilogue activation. Pure jnp — legal inside the kernel."""
+    if activation == "none":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(z)
+    if activation == "gelu":
+        return jax.nn.gelu(z)
+    raise ValueError(f"unknown activation {activation!r}; one of {ACTIVATIONS}")
 
 
 def _cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
+
+
+def vmem_estimate(bB: int, pt: int, qt: int, k: int) -> int:
+    """Bytes of VMEM working set for one (bB, pt, qt) tile assignment.
+
+    x tile + (wr, wi) tiles double-buffered, f32 accumulator scratch pair,
+    y tile, and the four resident DFT basis matrices. The single source of
+    truth shared by :func:`choose_blocks` and benchmarks/kernel_bench.py.
+    """
+    K = k // 2 + 1
+    x_t = bB * qt * k * 4
+    w_t = 2 * pt * qt * K * 4
+    acc = 2 * bB * pt * K * 4
+    y_t = bB * pt * k * 4
+    dft = 2 * k * K * 4 + 2 * K * k * 4
+    return 2 * (x_t + w_t) + acc + y_t + dft   # ×2: double buffering
+
+
+def choose_batch_block(B: int, pt: int, qt: int, k: int,
+                       vmem_budget: int = 8 * 1024 * 1024) -> int:
+    """Batch tile for FIXED (pt, qt) block tiles — the plan path, where the
+    block-axis tiles are frozen into the padded weight layout at build time
+    and only the runtime batch varies."""
+    bB = min(B, 128)
+    while vmem_estimate(bB, pt, qt, k) > vmem_budget and bB > 8:
+        bB //= 2
+    return bB
 
 
 def choose_blocks(B: int, p: int, q: int, k: int,
@@ -57,35 +113,36 @@ def choose_blocks(B: int, p: int, q: int, k: int,
         of 128 where the problem allows (MXU/VREG alignment);
       * VMEM working set (x tile + w tiles + scratch + y tile) under budget.
     """
-    K = k // 2 + 1
     # lane-align the block counts for small k
     unit = max(1, 128 // k)
     qt = min(q, max(unit, 8 * unit))
     pt = min(p, max(unit, 8 * unit))
-    bB = min(B, 128)
-    def vmem(bB, pt, qt):
-        x_t = bB * qt * k * 4
-        w_t = 2 * pt * qt * K * 4
-        acc = 2 * bB * pt * K * 4
-        y_t = bB * pt * k * 4
-        dft = 2 * k * K * 4 + 2 * K * k * 4
-        return 2 * (x_t + w_t) + acc + y_t + dft   # ×2: double buffering
-    while vmem(bB, pt, qt) > vmem_budget and bB > 8:
-        bB //= 2
-    while vmem(bB, pt, qt) > vmem_budget and pt > unit:
+    bB = choose_batch_block(B, pt, qt, k, vmem_budget)
+    while vmem_estimate(bB, pt, qt, k) > vmem_budget and pt > unit:
         pt = max(unit, pt // 2)
-    while vmem(bB, pt, qt) > vmem_budget and qt > unit:
+    while vmem_estimate(bB, pt, qt, k) > vmem_budget and qt > unit:
         qt = max(unit, qt // 2)
     return bB, pt, qt
 
 
 def _bc_kernel(x_ref, wr_ref, wi_ref, c_ref, s_ref, ci_ref, si_ref,
-               o_ref, yr_acc, yi_acc, *, k: int, nq: int, out_dtype):
+               *refs, k: int, nq: int, out_dtype, activation: str = "none",
+               has_bias: bool = False):
     """One (b, i, j) grid step. Shapes (per tile):
       x_ref  : (bB, qt·k)      wr/wi : (pt, qt, K)
       c/s    : (k, K)          ci/si : (K, k)
+      b_ref  : (1, pt·k)       [only when has_bias]
       o_ref  : (bB, pt·k)      yr/yi : (bB, pt, K) f32 scratch
+
+    The fused epilogue (bias add + activation) runs on the final q step,
+    after the inverse rDFT and before the VMEM→HBM writeback — mirroring the
+    paper's IFFT + bias/activation peripheral stage.
     """
+    if has_bias:
+        b_ref, o_ref, yr_acc, yi_acc = refs
+    else:
+        o_ref, yr_acc, yi_acc = refs
+        b_ref = None
     j = pl.program_id(2)
     K = k // 2 + 1
     bB = x_ref.shape[0]
@@ -118,13 +175,17 @@ def _bc_kernel(x_ref, wr_ref, wi_ref, c_ref, s_ref, ci_ref, si_ref,
         yr = yr_acc[...].reshape(bB * pt, K)
         yi = yi_acc[...].reshape(bB * pt, K)
         # inverse rDFT on the MXU: (bB·pt, K) @ (K, k)
-        y = yr @ ci_ref[...] + yi @ si_ref[...]
-        o_ref[...] = y.reshape(bB, pt * k).astype(out_dtype)
+        y = (yr @ ci_ref[...] + yi @ si_ref[...]).reshape(bB, pt * k)
+        if has_bias:
+            y = y + b_ref[...].astype(jnp.float32)
+        y = apply_activation(y, activation)
+        o_ref[...] = y.astype(out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "block_b", "block_p", "block_q", "interpret"),
+    static_argnames=("k", "block_b", "block_p", "block_q", "interpret",
+                     "activation"),
 )
 def bc_matmul_pallas(
     x: jax.Array,
@@ -134,38 +195,51 @@ def bc_matmul_pallas(
     s: jax.Array,
     ci: jax.Array,
     si: jax.Array,
+    bias: Optional[jax.Array] = None,
     *,
     k: int,
     block_b: int,
     block_p: int,
     block_q: int,
     interpret: bool = False,
+    activation: str = "none",
 ) -> jax.Array:
     """x (B, q·k) × freq-weights (p, q, K)·2 -> y (B, p·k).
 
-    Caller (ops.py) guarantees B % block_b == 0, p % block_p == 0,
-    q % block_q == 0 (it pads otherwise).
+    ``bias`` (1, p·k) and ``activation`` run inside the kernel's final-q
+    epilogue (fused, no extra HBM round-trip). Caller (ops.py / plan.py)
+    guarantees B % block_b == 0, p % block_p == 0, q % block_q == 0 (it
+    pads otherwise).
     """
     B = x.shape[0]
     p, q, K = wr.shape
     assert K == k // 2 + 1
     grid = (B // block_b, p // block_p, q // block_q)
 
+    has_bias = bias is not None
     kernel = functools.partial(
-        _bc_kernel, k=k, nq=grid[2], out_dtype=x.dtype
+        _bc_kernel, k=k, nq=grid[2], out_dtype=x.dtype,
+        activation=activation, has_bias=has_bias,
     )
+    in_specs = [
+        pl.BlockSpec((block_b, block_q * k), lambda b, i, j: (b, j)),
+        pl.BlockSpec((block_p, block_q, K), lambda b, i, j: (i, j, 0)),
+        pl.BlockSpec((block_p, block_q, K), lambda b, i, j: (i, j, 0)),
+        pl.BlockSpec((k, K), lambda b, i, j: (0, 0)),
+        pl.BlockSpec((k, K), lambda b, i, j: (0, 0)),
+        pl.BlockSpec((K, k), lambda b, i, j: (0, 0)),
+        pl.BlockSpec((K, k), lambda b, i, j: (0, 0)),
+    ]
+    args = [x, wr, wi, c, s, ci, si]
+    if has_bias:
+        in_specs.append(
+            pl.BlockSpec((1, block_p * k), lambda b, i, j: (0, i))
+        )
+        args.append(bias)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_q * k), lambda b, i, j: (b, j)),
-            pl.BlockSpec((block_p, block_q, K), lambda b, i, j: (i, j, 0)),
-            pl.BlockSpec((block_p, block_q, K), lambda b, i, j: (i, j, 0)),
-            pl.BlockSpec((k, K), lambda b, i, j: (0, 0)),
-            pl.BlockSpec((k, K), lambda b, i, j: (0, 0)),
-            pl.BlockSpec((K, k), lambda b, i, j: (0, 0)),
-            pl.BlockSpec((K, k), lambda b, i, j: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_p * k), lambda b, i, j: (b, i)),
         out_shape=jax.ShapeDtypeStruct((B, p * k), x.dtype),
         scratch_shapes=[
@@ -173,4 +247,4 @@ def bc_matmul_pallas(
             pltpu.VMEM((block_b, block_p, K), jnp.float32),
         ],
         interpret=interpret,
-    )(x, wr, wi, c, s, ci, si)
+    )(*args)

@@ -1,30 +1,49 @@
-"""Public op: differentiable block-circulant matmul backed by the Pallas kernel.
+"""Public ops: differentiable block-circulant matmuls backed by the Pallas kernel.
 
 ``block_circulant_matmul(x, w)``: x (..., q·k) × blocks w (p, q, k) -> (..., p·k)
 
-* forward  — Pallas kernel (frequency-domain fused; interpret mode on CPU).
+* forward  — Pallas kernel (frequency-domain fused; interpret mode on CPU),
+  with an optional **fused epilogue** (bias add + activation) executed inside
+  the kernel's final-q writeback, and an optional **frozen frequency-weight
+  path** (``w_freq=(wr, wi)``) that skips the per-call ``rfft(w)`` entirely —
+  the paper's BRAM-resident FFT(w) inference fast path. Execution plans
+  (:mod:`.plan`) build on the frozen path.
 * backward — closed-form circulant adjoints (no dense expansion):
-    dL/dx  = g @ W           : block-circulant matvec with the *transposed*
-                               block table (W^T)_{ji} = W_ij^T; a circulant
-                               transpose is the index-reversed vector, i.e.
-                               conj(ŵ) in the frequency domain.
+    dL/dx  = g @ W : **reuses the Pallas kernel** with the conjugated /
+             index-reversed frequency weights (a circulant transpose is the
+             index-reversed vector ⇒ conj(ŵ); the block table transposes
+             p ↔ q). No pure-XLA einsum fallback on the hot adjoint.
     dL/dw[i,j] = Σ_b x_j ⋆ g_i  (circular cross-correlation)
                = irfft( Σ_b conj(x̂_j) ∘ ĝ_i )
   Both adjoints are O(n log n) — the paper's training-phase complexity claim.
+  Under ``jax.grad`` the forward runs with the activation *unfused* (the
+  pre-activation is the residual), keeping recompute-under-grad semantics;
+  the primal-only (inference) call is fully fused.
+
+``block_circulant_matmul_multi`` stacks several projections that share one
+input (LSTM gates, attention QKV) along the p axis and runs them as ONE
+kernel launch (C-LSTM's fused gate dataflow).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.circulant import dft_bases
-from repro.kernels.block_circulant.kernel import bc_matmul_pallas, choose_blocks
+from repro.core.circulant import concat_biases, dft_bases, split_outputs
+from repro.kernels.block_circulant.kernel import (apply_activation,
+                                                  bc_matmul_pallas,
+                                                  choose_batch_block,
+                                                  choose_blocks)
 
-__all__ = ["block_circulant_matmul"]
+__all__ = [
+    "block_circulant_matmul",
+    "block_circulant_matmul_multi",
+    "freq_weights",
+]
 
 
 def _on_tpu() -> bool:
@@ -44,69 +63,283 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def _forward(x2d: jax.Array, w: jax.Array, interpret: bool) -> jax.Array:
-    """x2d (B, q·k), w (p, q, k) -> (B, p·k) via the Pallas kernel."""
-    p, q, k = w.shape
-    B = x2d.shape[0]
-    K = k // 2 + 1
-    c, s, ci, si = dft_bases(k, jnp.float32)
-    wf = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)
-    wr, wi = jnp.real(wf), jnp.imag(wf)
+def freq_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Time-domain block table (..., p, q, k) -> (wr, wi) real/imag rfft.
 
-    bB, pt, qt = choose_blocks(B, p, q, k)
+    The frozen-inference precompute (paper: FFT(w) stored in BRAM once).
+    Leading stack/expert dims pass through untouched.
+    """
+    wf = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)
+    return jnp.real(wf), jnp.imag(wf)
+
+
+@functools.lru_cache(maxsize=512)
+def _tiles(B: int, p: int, q: int, k: int) -> Tuple[int, int, int]:
+    return choose_blocks(B, p, q, k)
+
+
+def _run_kernel(x2d: jax.Array, wr: jax.Array, wi: jax.Array,
+                bias2d: Optional[jax.Array], k: int, activation: str,
+                interpret: bool,
+                tiles: Optional[Tuple[int, int]] = None) -> jax.Array:
+    """Pad (rows + block dims) and launch. wr/wi (P, Q, K) may already be
+    tile-aligned (plan path) — padding is then a no-op. Returns the FULL
+    (B, P_pad·k) output; the caller slices. ``tiles=(pt, qt)`` uses the
+    plan's frozen block tiles (only the batch tile stays runtime-chosen)."""
+    P, Q, _ = wr.shape
+    B = x2d.shape[0]
+    if tiles is not None:
+        pt, qt = tiles
+        bB = choose_batch_block(B, pt, qt, k)
+    else:
+        bB, pt, qt = _tiles(B, P, Q, k)
     xp = _pad_to(x2d, 0, bB)
+    xp = _pad_to(xp, 1, Q * k)           # x cols up to the weight's Q blocks
     wr = _pad_to(_pad_to(wr, 0, pt), 1, qt)
     wi = _pad_to(_pad_to(wi, 0, pt), 1, qt)
-    if wr.shape[1] != q:  # q padded -> pad x's block dim to match
+    if wr.shape[1] != Q:                 # q padded -> pad x block dim to match
         xp = _pad_to(
-            xp.reshape(xp.shape[0], q, k), 1, qt
+            xp.reshape(xp.shape[0], Q, k), 1, qt
         ).reshape(xp.shape[0], -1)
+    if bias2d is not None:
+        bias2d = _pad_to(bias2d, 1, pt * k)
+    c, s, ci, si = dft_bases(k, jnp.float32)
     y = bc_matmul_pallas(
-        xp, wr, wi, c, s, ci, si,
+        xp, wr, wi, c, s, ci, si, bias2d,
         k=k, block_b=bB, block_p=pt, block_q=qt, interpret=interpret,
+        activation=activation,
     )
-    return y[:B, : p * k]
+    return y[:B]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _bc_matmul2d(x2d: jax.Array, w: jax.Array, interpret: bool) -> jax.Array:
-    return _forward(x2d, w, interpret)
+def _transpose_freq(wr: jax.Array, wi: jax.Array):
+    """Frequency weights of the transposed block-circulant matrix.
+
+    (W^T)_{ji} = W_ij^T and a circulant transpose is the index-reversed
+    vector, i.e. conj(ŵ) in the frequency domain: swap (p, q), negate wi.
+    """
+    return jnp.transpose(wr, (1, 0, 2)), -jnp.transpose(wi, (1, 0, 2))
 
 
-def _fwd(x2d, w, interpret):
-    return _forward(x2d, w, interpret), (x2d, w)
+def _dx_via_kernel(gz: jax.Array, wr: jax.Array, wi: jax.Array, k: int,
+                   q_out: int, interpret: bool) -> jax.Array:
+    """dx = gz @ W through the kernel with conj/index-reversed freq weights."""
+    P = wr.shape[0]
+    gzp = _pad_to(gz, 1, P * k)
+    wrT, wiT = _transpose_freq(wr, wi)
+    dx = _run_kernel(gzp, wrT, wiT, None, k, "none", interpret)
+    return dx[:, : q_out * k]
 
 
-def _bwd(interpret, res, g):
-    x2d, w = res
+def _dw_freq_cotangents(x2d, gz, P, Q, k):
+    """(dwr, dwi, gyr-free) frequency cotangents of the per-bin complex GEMM.
+
+    x2d (B, ≤Q·k) and gz (B, ≤P·k) are zero-padded up to the full (P, Q)
+    block grid; padded rows/cols contribute exact zeros.
+    """
+    C, S, Ci, Si = dft_bases(k, jnp.float32)
+    f32 = jnp.float32
+    xb = _pad_to(x2d.astype(f32), 1, Q * k).reshape(-1, Q, k)
+    xr = xb @ C
+    xi = xb @ S
+    gb = _pad_to(gz.astype(f32), 1, P * k).reshape(-1, P, k)
+    # adjoint of the inverse rDFT (y = yr@Ci + yi@Si)
+    gyr = gb @ Ci.T
+    gyi = gb @ Si.T
+    dwr = jnp.einsum("bpf,bqf->pqf", gyr, xr) + jnp.einsum(
+        "bpf,bqf->pqf", gyi, xi)
+    dwi = -jnp.einsum("bpf,bqf->pqf", gyr, xi) + jnp.einsum(
+        "bpf,bqf->pqf", gyi, xr)
+    return dwr, dwi
+
+
+def _act_bwd(activation: str, z: jax.Array, g: jax.Array) -> jax.Array:
+    """gz = g · act'(z), via jax.vjp so every epilogue stays exact."""
+    if activation == "none":
+        return g
+    _, vjp = jax.vjp(lambda t: apply_activation(t, activation), z)
+    return vjp(g.astype(z.dtype))[0]
+
+
+# ---------------------------------------------------------------------------
+# Time-domain-parameter op (training path): differentiable in (x, w, bias)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _bc_matmul2d(interpret: bool, activation: str, x2d: jax.Array,
+                 w: jax.Array, bias2d: Optional[jax.Array]) -> jax.Array:
     p, q, k = w.shape
-    xh = jnp.fft.rfft(
-        x2d.astype(jnp.float32).reshape(-1, q, k), axis=-1
-    )                                                    # (B, q, K)
-    gh = jnp.fft.rfft(
-        g.astype(jnp.float32).reshape(-1, p, k), axis=-1
-    )                                                    # (B, p, K)
-    wh = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)    # (p, q, K)
-    # dx̂[b,q,f] = Σ_p ĝ[b,p,f]·conj(ŵ[p,q,f])
-    dxh = jnp.einsum("bpf,pqf->bqf", gh, jnp.conj(wh))
-    dx = jnp.fft.irfft(dxh, n=k, axis=-1).reshape(x2d.shape).astype(x2d.dtype)
-    # dŵ[p,q,f] = Σ_b ĝ[b,p,f]·conj(x̂[b,q,f])
-    dwh = jnp.einsum("bpf,bqf->pqf", gh, jnp.conj(xh))
-    dw = jnp.fft.irfft(dwh, n=k, axis=-1).astype(w.dtype)
-    return dx, dw
+    wr, wi = freq_weights(w)
+    y = _run_kernel(x2d, wr, wi, bias2d, k, activation, interpret)
+    return y[:, : p * k]
+
+
+def _fwd(interpret, activation, x2d, w, bias2d):
+    p, q, k = w.shape
+    wr, wi = freq_weights(w)
+    # recompute-under-grad: pre-activation z is the residual; the epilogue
+    # activation runs unfused so its input is available to the VJP.
+    z = _run_kernel(x2d, wr, wi, bias2d, k, "none", interpret)[:, : p * k]
+    return apply_activation(z, activation).astype(x2d.dtype), (x2d, w, bias2d, z)
+
+
+def _bwd(interpret, activation, res, g):
+    x2d, w, bias2d, z = res
+    p, q, k = w.shape
+    gz = _act_bwd(activation, z, g)
+    wr, wi = freq_weights(w)
+    dx = _dx_via_kernel(gz, wr, wi, k, q, interpret).astype(x2d.dtype)
+    dwr, dwi = _dw_freq_cotangents(x2d, gz, p, q, k)
+    # pull the frequency cotangent back through rfft: dw = dwr@C^T + dwi@S^T
+    C, S, _, _ = dft_bases(k, jnp.float32)
+    dw = (dwr @ C.T + dwi @ S.T).astype(w.dtype)
+    db = None
+    if bias2d is not None:
+        db = gz.sum(0, keepdims=True).astype(bias2d.dtype)
+    return dx, dw, db
 
 
 _bc_matmul2d.defvjp(_fwd, _bwd)
 
 
+# ---------------------------------------------------------------------------
+# Frozen frequency-weight op (inference / plan path): differentiable in
+# (x, wr, wi, bias) — no fft primitive anywhere in its jaxpr
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _bc_freq2d(interpret: bool, activation: str, k: int, p: int,
+               tiles: Optional[Tuple[int, int]],
+               x2d: jax.Array, wr: jax.Array, wi: jax.Array,
+               bias2d: Optional[jax.Array]) -> jax.Array:
+    y = _run_kernel(x2d, wr, wi, bias2d, k, activation, interpret, tiles)
+    return y[:, : p * k]
+
+
+def _freq_fwd(interpret, activation, k, p, tiles, x2d, wr, wi, bias2d):
+    z = _run_kernel(x2d, wr, wi, bias2d, k, "none", interpret,
+                    tiles)[:, : p * k]
+    y = apply_activation(z, activation).astype(x2d.dtype)
+    return y, (x2d, wr, wi, bias2d, z)
+
+
+def _freq_bwd(interpret, activation, k, p, tiles, res, g):
+    x2d, wr, wi, bias2d, z = res
+    P, Q, _ = wr.shape
+    q = x2d.shape[1] // k
+    gz = _act_bwd(activation, z, g)
+    dx = _dx_via_kernel(gz, wr, wi, k, q, interpret).astype(x2d.dtype)
+    dwr, dwi = _dw_freq_cotangents(x2d, gz, P, Q, k)
+    db = None
+    if bias2d is not None:
+        # gz spans the padded P·k columns; the bias only the true p·k
+        db = gz[:, : bias2d.shape[1]].sum(0, keepdims=True).astype(
+            bias2d.dtype)
+    return dx, dwr.astype(wr.dtype), dwi.astype(wi.dtype), db
+
+
+_bc_freq2d.defvjp(_freq_fwd, _freq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def _as_bias2d(bias: Optional[jax.Array]) -> Optional[jax.Array]:
+    if bias is None:
+        return None
+    return bias.reshape(1, -1).astype(jnp.float32)
+
+
 def block_circulant_matmul(
-    x: jax.Array, w: jax.Array, *, interpret: Optional[bool] = None
+    x: jax.Array,
+    w: Optional[jax.Array],
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: str = "none",
+    w_freq: Optional[Tuple[jax.Array, jax.Array]] = None,
+    k: Optional[int] = None,
+    q: Optional[int] = None,
+    tiles: Optional[Tuple[int, int]] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Differentiable block-circulant matmul; arbitrary leading batch dims."""
+    """Differentiable block-circulant matmul; arbitrary leading batch dims.
+
+    ``bias`` (p·k,) and ``activation`` fuse into the kernel epilogue.
+    ``w_freq=(wr, wi)`` — precomputed real/imag rfft(w), shape (p, q, K) —
+    selects the frozen frequency path (no fft in the traced step); pass
+    ``k`` alongside when w is None (K alone is ambiguous for odd k), and
+    the true ``q`` plus the frozen ``tiles=(pt, qt)`` when wr/wi are
+    tile-padded along the block axes (plans).
+    """
     if interpret is None:
         interpret = not _on_tpu()
-    p, q, k = w.shape
+    if w_freq is not None:
+        wr, wi = w_freq
+        p = wr.shape[0]
+        if k is None:
+            k = 2 * (wr.shape[-1] - 1) if w is None else w.shape[-1]
+        if q is None:
+            q = wr.shape[1]
+    else:
+        p, q, k = w.shape
+    if x.shape[-1] != q * k:
+        # _run_kernel pads x up to padded weights; a caller-side width
+        # mismatch against the TRUE q is a miswiring, never padding.
+        raise ValueError(
+            f"x feature dim {x.shape[-1]} is incompatible with block "
+            f"tables (q={q}, k={k}): expected exactly q*k={q * k}"
+        )
     lead = x.shape[:-1]
-    x2d = x.reshape(-1, q * k)
-    y = _bc_matmul2d(x2d, w, bool(interpret))
+    x2d = x.reshape(-1, x.shape[-1])
+    b2d = _as_bias2d(bias)
+    if w_freq is not None:
+        y = _bc_freq2d(bool(interpret), activation, int(k), int(p),
+                       tiles, x2d, wr, wi, b2d)
+    else:
+        y = _bc_matmul2d(bool(interpret), activation, x2d, w, b2d)
     return y.reshape(*lead, p * k)
+
+
+def block_circulant_matmul_multi(
+    x: jax.Array,
+    ws: Optional[Sequence[jax.Array]],
+    *,
+    biases: Optional[Sequence[Optional[jax.Array]]] = None,
+    activation: str = "none",
+    w_freqs: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
+    k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> List[jax.Array]:
+    """N projections sharing one input -> ONE stacked-p kernel launch.
+
+    All tables must share (q, k); outputs are split back per projection.
+    This is the C-LSTM gate fusion / attention QKV fusion primitive: instead
+    of N grid pipelines each re-streaming the same x tiles, the concatenated
+    (Σp_i, q, k) table amortizes the forward DFT of x and the pipeline setup
+    across every projection.
+    """
+    if w_freqs is not None:
+        ps = [wr.shape[0] for wr, _ in w_freqs]
+        if k is None:
+            if ws is not None:
+                k = ws[0].shape[-1]
+            else:
+                k = 2 * (w_freqs[0][0].shape[-1] - 1)
+        w_cat = None
+        wf_cat = (jnp.concatenate([wr for wr, _ in w_freqs], axis=0),
+                  jnp.concatenate([wi for _, wi in w_freqs], axis=0))
+    else:
+        ps = [w.shape[0] for w in ws]
+        k = ws[0].shape[-1]
+        w_cat = jnp.concatenate(list(ws), axis=0)
+        wf_cat = None
+    bias_cat = concat_biases(ps, biases, k)
+    y = block_circulant_matmul(
+        x, w_cat, bias=bias_cat, activation=activation, w_freq=wf_cat,
+        k=k, interpret=interpret,
+    )
+    return split_outputs(y, ps, k)

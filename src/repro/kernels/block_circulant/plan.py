@@ -1,0 +1,272 @@
+"""Frequency-domain execution plans: precompute once, launch forever.
+
+The paper's §5 inference dataflow computes FFT(w) ONCE and keeps it resident
+in BRAM; only activations stream through the FFT→∘→IFFT pipeline. This
+module is the TPU analogue. A :class:`BCPlan` precomputes, per weight, at
+init / checkpoint-load time:
+
+  * the rfft'd weights ``(wr, wi)`` — padded to the chosen tile grid,
+  * the tile sizes ``(pt, qt)`` and padded block counts (plumbed into the
+    launch, so the plan's geometry IS the executed geometry),
+  * optionally a fused bias and epilogue activation.
+
+(The rDFT basis matrices are k-only constants served by the lru-cached
+``dft_bases(k)`` at launch; plans don't duplicate them as pytree leaves.)
+
+``plan.apply(x)`` then contains **no fft primitive and no weight-side work**
+in its jaxpr — just the pad of x and one ``pallas_call``
+(``jax.make_jaxpr(plan.apply)(x)`` is checked in tests). Plan *geometry*
+(tile choice + padded shapes) is cached on ``(p, q, k, dtype)`` so a model
+with many same-shaped layers derives it once.
+
+``freeze_params`` walks a (specs, params) pair and attaches ``wr`` / ``wi``
+next to every circulant-tagged ``w`` leaf — the serving engine calls it once
+after loading a checkpoint, and ``nn.Linear`` picks the frozen path up
+automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.circulant import concat_biases, split_outputs
+from repro.kernels.block_circulant.kernel import choose_blocks, vmem_estimate
+from repro.kernels.block_circulant import ops as bc_ops
+
+__all__ = [
+    "BCPlan",
+    "PlanGeometry",
+    "build_plan",
+    "build_multi_plan",
+    "plan_geometry",
+    "geometry_cache_info",
+    "clear_plan_cache",
+    "freeze_params",
+]
+
+# Default batch hint for tile choice when the runtime batch is unknown at
+# plan-build time. Tile sizes (pt, qt) depend on B only when the VMEM budget
+# binds; 128 matches the kernel's max bB, so plans and the per-call path
+# agree everywhere the budget is slack (bitwise-identical outputs).
+_B_HINT = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGeometry:
+    """Static geometry of one (p, q, k) problem: tiles + padded shapes."""
+
+    p: int
+    q: int
+    k: int
+    pt: int
+    qt: int
+    p_pad: int
+    q_pad: int
+
+    @property
+    def K(self) -> int:
+        return self.k // 2 + 1
+
+    def vmem_bytes(self, bB: int) -> int:
+        return vmem_estimate(bB, self.pt, self.qt, self.k)
+
+
+@functools.lru_cache(maxsize=1024)
+def plan_geometry(p: int, q: int, k: int, dtype: str = "float32",
+                  b_hint: int = _B_HINT) -> PlanGeometry:
+    """Cached geometry, keyed on (shape, k, dtype): chosen once per layer
+    shape, shared by every plan (and every step) with that signature."""
+    _, pt, qt = choose_blocks(b_hint, p, q, k)
+    p_pad = p + (-p) % pt
+    q_pad = q + (-q) % qt
+    return PlanGeometry(p=p, q=q, k=k, pt=pt, qt=qt, p_pad=p_pad, q_pad=q_pad)
+
+
+def geometry_cache_info():
+    return plan_geometry.cache_info()
+
+
+def clear_plan_cache() -> None:
+    plan_geometry.cache_clear()
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("wr", "wi", "bias"),
+    meta_fields=("k", "p", "q", "pt", "qt", "splits", "activation",
+                 "interpret"),
+)
+@dataclasses.dataclass(frozen=True)
+class BCPlan:
+    """A frozen frequency-domain execution plan for one projection (or one
+    stacked multi-projection). Registered as a pytree: jit/scan/device_put
+    treat (wr, wi, bias) as data and the geometry as static. The rDFT basis
+    matrices are NOT stored — they are k-only constants that the launch
+    path materializes from the lru-cached ``dft_bases(k)``."""
+
+    wr: jax.Array                      # (p_pad, q_pad, K) f32
+    wi: jax.Array                      # (p_pad, q_pad, K) f32
+    bias: Optional[jax.Array]          # (1, p·k) f32 or None
+    k: int
+    p: int                             # true (unpadded) output blocks
+    q: int                             # true (unpadded) input blocks
+    pt: int
+    qt: int
+    splits: Tuple[int, ...]            # per-projection p_i (multi-plans)
+    activation: str
+    interpret: bool
+
+    # -- derived -------------------------------------------------------
+    @property
+    def in_dim(self) -> int:
+        return self.q * self.k
+
+    @property
+    def out_dim(self) -> int:
+        return self.p * self.k
+
+    @property
+    def n_projections(self) -> int:
+        return len(self.splits)
+
+    def cache_key(self) -> Tuple:
+        """The geometry-cache key this plan was derived from."""
+        return (self.p, self.q, self.k, str(self.wr.dtype))
+
+    # -- apply ---------------------------------------------------------
+    def apply(self, x: jax.Array) -> jax.Array:
+        """x (..., q·k) -> (..., p·k), fused epilogue included. The traced
+        computation contains no fft and no weight-side transform/pad."""
+        return bc_ops.block_circulant_matmul(
+            x, None, w_freq=(self.wr, self.wi),
+            bias=self.bias, activation=self.activation, k=self.k, q=self.q,
+            tiles=(self.pt, self.qt), interpret=self.interpret,
+        )[..., : self.out_dim]
+
+    __call__ = apply
+
+    def apply_multi(self, x: jax.Array) -> Tuple[jax.Array, ...]:
+        """Stacked multi-projection apply: one launch, N outputs."""
+        return tuple(split_outputs(self.apply(x), self.splits, self.k))
+
+
+def _pad_freq(wr, wi, geo: PlanGeometry):
+    pad = ((0, geo.p_pad - wr.shape[0]), (0, geo.q_pad - wr.shape[1]), (0, 0))
+    if any(a or b for a, b in pad):
+        wr = jnp.pad(wr, pad)
+        wi = jnp.pad(wi, pad)
+    return wr, wi
+
+
+def build_plan(
+    w: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: str = "none",
+    interpret: Optional[bool] = None,
+    b_hint: int = _B_HINT,
+) -> BCPlan:
+    """Precompute a plan from a time-domain block table w (p, q, k).
+
+    Runs rfft(w), tile choice, and padding ONCE — call at init or after
+    checkpoint load, never inside the step function.
+    """
+    if interpret is None:
+        interpret = not bc_ops._on_tpu()
+    p, q, k = w.shape
+    geo = plan_geometry(p, q, k, "float32", b_hint)
+    wr, wi = bc_ops.freq_weights(w)
+    wr, wi = _pad_freq(wr, wi, geo)
+    b2d = bc_ops._as_bias2d(bias)
+    return BCPlan(
+        wr=wr, wi=wi, bias=b2d,
+        k=k, p=p, q=q, pt=geo.pt, qt=geo.qt, splits=(p,),
+        activation=activation, interpret=bool(interpret),
+    )
+
+
+def build_multi_plan(
+    ws: Sequence[jax.Array],
+    *,
+    biases: Optional[Sequence[Optional[jax.Array]]] = None,
+    activation: str = "none",
+    interpret: Optional[bool] = None,
+    b_hint: int = _B_HINT,
+) -> BCPlan:
+    """Stack N same-(q, k) projections along p into ONE plan / ONE launch.
+
+    The C-LSTM gate fusion at plan level: 4 gate matrices (or attention
+    Q/K/V) that read the same input become a single (Σp_i, q, k) table.
+    ``apply_multi`` splits the fused output back per projection.
+    """
+    if interpret is None:
+        interpret = not bc_ops._on_tpu()
+    q, k = ws[0].shape[1], ws[0].shape[2]
+    for w in ws:
+        if w.shape[1:] != (q, k):
+            raise ValueError(
+                f"multi-plan tables must share (q, k); got "
+                f"{[tuple(w.shape) for w in ws]}"
+            )
+    splits = tuple(int(w.shape[0]) for w in ws)
+    p = sum(splits)
+    w_cat = jnp.concatenate(list(ws), axis=0)
+    bias_cat = concat_biases(splits, biases, k)
+    plan = build_plan(w_cat, bias=bias_cat, activation=activation,
+                      interpret=interpret, b_hint=b_hint)
+    return dataclasses.replace(plan, splits=splits)
+
+
+# ---------------------------------------------------------------------------
+# Whole-param-tree freezing (serving)
+# ---------------------------------------------------------------------------
+
+
+def freeze_params(specs, params) -> Dict[str, Any]:
+    """Replace every circulant table with its frozen frequency weights.
+
+    Walks the ParamSpec tree (which tags circulant leaves — see
+    ``nn.Linear.specs``) in lockstep with the param pytree; every tagged
+    ``w`` is REPLACED by entries ``wr`` / ``wi`` = rfft(w) along the last
+    axis (leading stack/expert dims preserved, so scan-over-layers slices
+    them consistently). Dropping the time-domain table matters: keeping it
+    would roughly double the circulant weight footprint in device memory
+    for the process lifetime of a serving job. ``nn.Linear`` (and the
+    fused lstm/attention/ffn paths) detect the frozen entries and take the
+    no-fft path without touching ``w``. Idempotent; non-circulant subtrees
+    are returned as-is (same objects, no copy).
+    """
+    from repro.nn.module import ParamSpec
+
+    if isinstance(specs, ParamSpec) or not isinstance(specs, dict) \
+            or not isinstance(params, dict):
+        return params
+    out = {}
+    dropped = set()
+    changed = False
+    for key, sub_spec in specs.items():
+        sub_param = params[key] if key in params else None
+        if (isinstance(sub_spec, ParamSpec) and key == "w"
+                and "circulant" in getattr(sub_spec, "tags", ())):
+            if "wr" in params and "wi" in params:   # already frozen
+                out["wr"], out["wi"] = params["wr"], params["wi"]
+            else:
+                out["wr"], out["wi"] = bc_ops.freq_weights(sub_param)
+                changed = True
+            if "w" in params:
+                dropped.add("w")
+                changed = True
+        else:
+            new = freeze_params(sub_spec, sub_param)
+            out[key] = new
+            changed = changed or (new is not sub_param)
+    # preserve params-only keys (already-frozen trees stay intact)
+    for key in params:
+        if key not in out and key not in dropped:
+            out[key] = params[key]
+    return out if changed else params

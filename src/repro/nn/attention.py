@@ -247,6 +247,30 @@ class Attention:
             s["k_norm"] = RMSNorm(hd, stack=self.stack).specs()
         return s
 
+    def _fused_qkv(self, params, x):
+        """Q/K/V as ONE stacked-p circulant launch when all three tables are
+        circulant with one block size (they share the input x, so the
+        forward transform of x and the kernel pipeline are amortized 3-way).
+        Returns (q, k, v) flat projections or None when not fusable."""
+        qp, kp, vp = self.q_proj, self.k_proj, self.v_proj
+        kb = qp.block_size
+        if not (qp.is_circulant and kp.is_circulant and vp.is_circulant
+                and kp.block_size == kb and vp.block_size == kb):
+            return None
+        from repro.core import circulant as circ
+
+        names = ("q", "k", "v")
+        frozen = all("wr" in params[n] and "wi" in params[n] for n in names)
+        return circ.block_circulant_apply_multi(
+            x,
+            None if frozen else [params[n]["w"] for n in names],
+            impl=self.cfg.swm.impl,
+            w_freqs=([(params[n]["wr"], params[n]["wi"]) for n in names]
+                     if frozen else None),
+            k=kb,
+            karatsuba=self.cfg.swm.karatsuba,
+        )
+
     @property
     def window(self) -> int:
         return self.cfg.sliding_window if self.local else 0
@@ -271,13 +295,21 @@ class Attention:
         hd, HQ, HKV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
         G = HQ // HKV
 
-        q = self.q_proj(params["q"], x).reshape(B, S, HQ, hd)
-        if self.cross and cache is not None and kv_x is None:
-            k = v = None                     # cross-attn decode: KV from cache
+        qkv = self._fused_qkv(params, x) if kv_x is None and not self.cross \
+            else None
+        if qkv is not None:
+            qh, kh, vh = qkv
+            q = qh.reshape(B, S, HQ, hd)
+            k = kh.reshape(B, S, HKV, hd)
+            v = vh.reshape(B, S, HKV, hd)
         else:
-            src = x if kv_x is None else kv_x
-            k = self.k_proj(params["k"], src).reshape(B, src.shape[1], HKV, hd)
-            v = self.v_proj(params["v"], src).reshape(B, src.shape[1], HKV, hd)
+            q = self.q_proj(params["q"], x).reshape(B, S, HQ, hd)
+            if self.cross and cache is not None and kv_x is None:
+                k = v = None                 # cross-attn decode: KV from cache
+            else:
+                src = x if kv_x is None else kv_x
+                k = self.k_proj(params["k"], src).reshape(B, src.shape[1], HKV, hd)
+                v = self.v_proj(params["v"], src).reshape(B, src.shape[1], HKV, hd)
 
         if cfg.qk_norm:
             q = RMSNorm(hd, stack=self.stack)(params["q_norm"], q)

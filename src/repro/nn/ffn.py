@@ -53,7 +53,10 @@ class SwiGLU:
         if (wi.is_circulant and wu.is_circulant
                 and wi.block_size == wu.block_size
                 and self.swm is not None and self.swm.impl == "dft"
-                and not self.expert_dims):
+                and not self.expert_dims
+                and "w" in params["wi"]):
+            # frozen (serve) trees have no time-domain tables; the per-Linear
+            # frozen path below is the faster route there anyway (no rfft(w))
             # fused pair: the gate/up projections share one forward DFT
             from repro.core.circulant import block_circulant_apply_pair
             gi, ui = block_circulant_apply_pair(

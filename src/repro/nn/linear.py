@@ -78,6 +78,7 @@ class Linear:
                 lead_axes + (self.out_axis, self.in_axis, None),
                 init="normal",
                 scale=std,
+                tags=("circulant",),
             )
         else:
             w = ParamSpec(
@@ -89,17 +90,40 @@ class Linear:
             )
         return {"w": w}
 
-    def __call__(self, params, x: jax.Array) -> jax.Array:
+    def __call__(self, params, x: jax.Array, *,
+                 bias: Optional[jax.Array] = None,
+                 activation: str = "none") -> jax.Array:
         """Apply. params['w'] must already have stack/expert dims consumed
-        (scan slices the stack axis; MoE vmaps the expert axis)."""
-        w = params["w"]
+        (scan slices the stack axis; MoE vmaps the expert axis).
+
+        ``bias`` / ``activation`` run as the fused epilogue on the circulant
+        path (inside the Pallas kernel's writeback). When the params carry
+        frozen frequency weights (``wr`` / ``wi``, attached once by
+        ``kernels.block_circulant.plan.freeze_params`` at serve time) the
+        per-call ``rfft(w)`` is skipped — the paper's BRAM-resident FFT(w).
+        """
         if self.is_circulant:
-            return circ.block_circulant_apply(
-                x, w, impl=self.swm.impl, karatsuba=self.swm.karatsuba
+            # frozen (serve) trees drop the time-domain table entirely —
+            # k comes from the layer config, never from w's shape
+            return circ.block_circulant_apply_fused(
+                x, params.get("w"), impl=self.swm.impl,
+                karatsuba=self.swm.karatsuba,
+                bias=bias, activation=activation,
+                w_freq=self.frozen_freq(params), k=self.block_size,
             )
-        return jnp.einsum(
-            "...i,io->...o", x, w.astype(x.dtype)
-        )
+        w = params["w"]
+        y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        from repro.kernels.block_circulant.kernel import apply_activation
+
+        return apply_activation(y, activation)
+
+    def frozen_freq(self, params):
+        """(wr, wi) when frozen frequency weights are attached, else None."""
+        if self.is_circulant and "wr" in params and "wi" in params:
+            return (params["wr"], params["wi"])
+        return None
 
     # convenience for param counting / compression reporting
     @property

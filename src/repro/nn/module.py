@@ -50,6 +50,8 @@ class ParamSpec:
       init:  one of "normal" | "zeros" | "ones" | "uniform" | callable.
       scale: std (normal) or bound (uniform). Layer constructors compute
              fan-in-aware scales themselves.
+      tags:  free-form markers consumed by tooling (e.g. "circulant" lets
+             kernels.block_circulant.plan.freeze_params find SWM tables).
     """
 
     shape: tuple
@@ -57,10 +59,12 @@ class ParamSpec:
     axes: tuple = ()
     init: Union[str, InitFn] = "normal"
     scale: float = 0.02
+    tags: tuple = ()
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
         object.__setattr__(self, "axes", tuple(self.axes))
+        object.__setattr__(self, "tags", tuple(self.tags))
         if len(self.axes) != len(self.shape):
             raise ValueError(
                 f"axes {self.axes} must match shape {self.shape} rank"

@@ -56,10 +56,21 @@ class Request:
 
 class ServeEngine:
     """Fixed-slot continuous batching: each slot independently prefills and
-    decodes; finished slots accept the next queued request."""
+    decodes; finished slots accept the next queued request.
+
+    At construction the engine **freezes the frequency-domain weights**:
+    every circulant table gets its rfft precomputed once
+    (``kernels.block_circulant.plan.freeze_params``) so the jitted prefill /
+    decode steps contain no ``rfft(w)`` — the paper's inference dataflow
+    (FFT(w) resident in BRAM, only activations stream through transforms).
+    """
 
     def __init__(self, model, cfg: ModelConfig, params, batch: int,
                  cache_len: int):
+        if cfg.swm.enabled:
+            from repro.kernels.block_circulant.plan import freeze_params
+
+            params = freeze_params(model.specs(), params)
         self.model, self.cfg, self.params = model, cfg, params
         self.batch, self.cache_len = batch, cache_len
         self.prefill = jax.jit(make_prefill_step(model, cfg))
