@@ -13,8 +13,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (complexity_scaling, compression_accuracy,
-                            kernel_bench, table1_dcnn, table1_lstm,
-                            table2_asic)
+                            kernel_bench, serve_bench, table1_dcnn,
+                            table1_lstm, table2_asic)
 
     print("name,us_per_call,derived")
     mods = [
@@ -24,6 +24,7 @@ def main() -> None:
         ("compression_accuracy", compression_accuracy),
         ("complexity_scaling", complexity_scaling),
         ("kernel_bench", kernel_bench),
+        ("serve_bench", serve_bench),
     ]
     failures = []
     for name, mod in mods:

@@ -1,5 +1,7 @@
-"""Serving demo: train a tiny SWM LM briefly, then serve batched requests
-through the continuous-batching engine (prefill → greedy decode).
+"""Serving demo: train a tiny SWM LM briefly, then serve a mixed-length,
+mixed-budget request batch through the continuous-batching engine —
+per-slot admission, bucketed prefill shapes, per-request sampling and
+stop tokens (prefill -> decode, frozen FFT(w)).
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -11,7 +13,7 @@ from repro.configs.base import ModelConfig, SWMConfig, TrainConfig
 from repro.data.pipeline import SyntheticLM
 from repro.models.decoder import HybridDecoderLM
 from repro.nn.module import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, SamplingParams, ServeEngine
 from repro.train.loop import init_train_state, make_train_step
 
 
@@ -32,17 +34,41 @@ def main():
         state, metrics = step(state, data.batch_jax(s))
     print(f"trained 120 steps, final loss {float(metrics['loss']):.3f}")
 
-    engine = ServeEngine(model, cfg, state["params"], batch=4, cache_len=64)
+    # 4 slots, prompt buckets 8/16 — the engine admits a request the moment
+    # a slot frees up, so the short-budget requests below don't stall the
+    # long ones (and vice versa).
+    engine = ServeEngine(model, cfg, state["params"], batch=4, cache_len=64,
+                         prompt_buckets=(8, 16), policy="sjf")
     # prompts drawn from the training distribution: the model should
     # continue the +1..+6 drift pattern it learned
     prompts = [np.array([5, 9, 14, 18, 21], np.int32),
                np.array([100, 104, 107], np.int32),
                np.array([50, 53], np.int32),
                np.array([7, 11, 16, 19, 25, 28], np.int32),
-               np.array([64, 70, 75], np.int32)]
-    outs = engine.generate([Request(p, max_new=8) for p in prompts])
-    for p, o in zip(prompts, outs):
-        print(f"prompt {list(p)} -> {o}")
+               np.array([64, 70, 75], np.int32),
+               np.array([30, 33, 37, 40], np.int32)]
+    reqs = [
+        Request(prompts[0], max_new=8),                       # greedy
+        Request(prompts[1], max_new=3),                       # short budget
+        Request(prompts[2], max_new=12),                      # long budget
+        Request(prompts[3], max_new=8,
+                stop_tokens=tuple(range(120, 128))),          # stop band
+        Request(prompts[4], max_new=8,
+                sampling=SamplingParams(temperature=0.7, top_k=8, seed=7)),
+        Request(prompts[5], max_new=6),
+    ]
+    outs = engine.generate(reqs)
+    for r, o in zip(reqs, outs):
+        tag = ("sampled" if r.sampling.temperature > 0 else
+               "stop" if r.stop_tokens else "greedy")
+        print(f"prompt {np.asarray(r.prompt).tolist()} [{tag:7s} "
+              f"max_new={r.max_new:2d}] -> {o}")
+    s = engine.stats
+    print(f"prefill shapes {sorted(s.prefill_shapes)} "
+          f"({engine.prefill_compiles} compiles, bound "
+          f"{engine.max_prefill_variants}); decode compiles "
+          f"{engine.decode_compiles}; tokens/decode-step "
+          f"{s.tokens_per_decode_step:.2f}")
 
 
 if __name__ == "__main__":

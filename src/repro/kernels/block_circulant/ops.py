@@ -28,6 +28,7 @@ kernel launch (C-LSTM's fused gate dataflow).
 from __future__ import annotations
 
 import functools
+import os
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -43,10 +44,19 @@ __all__ = [
     "block_circulant_matmul",
     "block_circulant_matmul_multi",
     "freq_weights",
+    "freq_weights_trace_count",
 ]
 
 
+def _force_interpret() -> bool:
+    """``REPRO_INTERPRET=1`` forces Pallas interpret mode even on TPU (the
+    CI matrix toggles this); any other value defers to platform detection."""
+    return os.environ.get("REPRO_INTERPRET", "") == "1"
+
+
 def _on_tpu() -> bool:
+    if _force_interpret():
+        return False
     try:
         return jax.devices()[0].platform == "tpu"
     except Exception:  # pragma: no cover
@@ -63,12 +73,25 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+# Counts every rfft(w) issued (eagerly or into a trace). Serving freezes
+# weights exactly once, so the regression tests assert this counter does not
+# move across an entire engine lifetime after freeze_params.
+_FREQ_WEIGHT_TRACES = 0
+
+
+def freq_weights_trace_count() -> int:
+    """Process-wide count of ``freq_weights`` invocations (rfft(w) work)."""
+    return _FREQ_WEIGHT_TRACES
+
+
 def freq_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Time-domain block table (..., p, q, k) -> (wr, wi) real/imag rfft.
 
     The frozen-inference precompute (paper: FFT(w) stored in BRAM once).
     Leading stack/expert dims pass through untouched.
     """
+    global _FREQ_WEIGHT_TRACES
+    _FREQ_WEIGHT_TRACES += 1
     wf = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)
     return jnp.real(wf), jnp.imag(wf)
 

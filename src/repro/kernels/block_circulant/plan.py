@@ -47,6 +47,7 @@ __all__ = [
     "geometry_cache_info",
     "clear_plan_cache",
     "freeze_params",
+    "count_frozen_tables",
 ]
 
 # Default batch hint for tile choice when the runtime batch is unknown at
@@ -270,3 +271,15 @@ def freeze_params(specs, params) -> Dict[str, Any]:
         if key not in out and key not in dropped:
             out[key] = params[key]
     return out if changed else params
+
+
+def count_frozen_tables(params) -> int:
+    """Number of frozen frequency tables (``wr``/``wi`` pairs) in a param
+    tree — i.e. how many rfft(w) transforms :func:`freeze_params` performed.
+    The serving engine's freeze-once invariant is asserted against this
+    (``ops.freq_weights_trace_count`` must grow by exactly this much at
+    engine construction and not at all afterwards)."""
+    if not isinstance(params, dict):
+        return 0
+    n = 1 if ("wr" in params and "wi" in params) else 0
+    return n + sum(count_frozen_tables(v) for v in params.values())

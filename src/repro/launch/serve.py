@@ -1,32 +1,56 @@
-"""Serving launcher: loads (or inits) params and serves batched requests.
+"""Serving launcher: loads (or inits) params and serves batched requests
+through the continuous-batching engine (or the wave baseline).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --batch 4 --cache-len 64
+        --batch 4 --cache-len 64 --prompt-buckets 8,16,32 --policy sjf
+
+The engine rounds prefill launches to (batch-bucket, prompt-bucket) shapes
+(bounded jit recompilation) and freezes the circulant frequency weights
+once at load — see repro.serve.engine for the serving model.
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import numpy as np
-import jax
 
 from repro.configs.registry import get_config, get_smoke
 from repro.ft.checkpoint import latest_step, restore_checkpoint
 from repro.launch.specs import build_model
 from repro.nn.module import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (Request, SamplingParams, Scheduler,
+                                ServeEngine, WaveEngine)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="cache slots (continuous) / wave size (wave)")
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--engine", choices=("continuous", "wave"),
+                    default="continuous")
+    ap.add_argument("--policy", choices=Scheduler.POLICIES, default="fifo",
+                    help="admission order: fifo | sjf (shortest prompt first)")
+    ap.add_argument("--prompt-buckets", default="",
+                    help="comma-separated prompt-length buckets, e.g. "
+                         "8,16,32 (default: powers of two up to cache-len)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stop-token", type=int, action="append", default=[],
+                    help="stop generation when this token id is produced "
+                         "(repeatable)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="compile every bucket executable before serving "
+                         "(continuous engine only)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -40,15 +64,52 @@ def main():
         params = init_params(model.specs(), 0)
         print("serving freshly initialized params (demo mode)")
 
-    engine = ServeEngine(model, cfg, params, batch=args.batch,
-                         cache_len=args.cache_len)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).astype(np.int32),
-                    max_new=args.max_new)
-            for _ in range(args.n_requests)]
+    if args.engine == "wave":
+        if args.temperature > 0 or args.top_k or args.stop_token:
+            ap.error("--engine wave is a greedy-only baseline; "
+                     "--temperature/--top-k/--stop-token need the "
+                     "continuous engine")
+        if args.prompt_buckets or args.policy != "fifo" or args.prewarm:
+            ap.error("--prompt-buckets/--policy/--prewarm only apply to "
+                     "the continuous engine")
+        engine = WaveEngine(model, cfg, params, batch=args.batch,
+                            cache_len=args.cache_len)
+    else:
+        buckets = ([int(b) for b in args.prompt_buckets.split(",")]
+                   if args.prompt_buckets else None)
+        engine = ServeEngine(model, cfg, params, batch=args.batch,
+                             cache_len=args.cache_len,
+                             prompt_buckets=buckets, policy=args.policy)
+        print(f"buckets: batch={engine.batch_buckets} "
+              f"prompt={engine.prompt_buckets} "
+              f"(<= {engine.max_prefill_variants} prefill executables)")
+        if args.prewarm:
+            n = engine.prewarm()
+            print(f"prewarmed {n} executables")
+
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(
+            rng.integers(0, cfg.vocab,
+                         size=int(rng.integers(3, 9))).astype(np.int32),
+            max_new=args.max_new,
+            stop_tokens=tuple(args.stop_token),
+            sampling=sampling,
+        )
+        for _ in range(args.n_requests)
+    ]
+    t0 = time.perf_counter()
     outs = engine.generate(reqs)
+    dt = time.perf_counter() - t0
     for i, o in enumerate(outs):
         print(f"request {i}: {o}")
+    n_tok = sum(len(o) for o in outs)
+    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
+          f"prefill compiles={engine.prefill_compiles} "
+          f"decode compiles={engine.decode_compiles} "
+          f"tokens/decode-step={engine.stats.tokens_per_decode_step:.2f}")
 
 
 if __name__ == "__main__":

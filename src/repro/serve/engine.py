@@ -1,15 +1,60 @@
-"""Serving: prefill / decode step builders and a batched request engine.
+"""Serving: plan-aware continuous batching with bucketed shapes.
 
 ``make_prefill_step`` / ``make_decode_step`` produce the jittable functions
 that the dry-run lowers for the ``prefill_*`` and ``decode_*`` / ``long_*``
-shape cells. ``ServeEngine`` is a minimal continuous-batching driver used by
-the serving example: fixed batch slots, greedy sampling, per-slot stop.
+shape cells. ``ServeEngine`` is the production driver; ``WaveEngine`` is the
+fixed-wave baseline it replaced (kept for benchmarking and equivalence
+tests — see ``benchmarks/serve_bench.py``).
+
+Serving model (the paper's §5 inference dataflow, engine-level)
+---------------------------------------------------------------
+
+The paper keeps ``FFT(w)`` resident in BRAM and streams only activations
+through the FFT → ∘ → IFFT pipeline. The engine is the TPU/runtime analogue
+of that split, applied at three levels:
+
+* **Frozen frequency weights** — at construction the engine runs
+  ``kernels.block_circulant.plan.freeze_params`` ONCE: every circulant table
+  is replaced by its rfft ``(wr, wi)`` and the time-domain table is dropped.
+  This is the engine's shared plan cache: the same frozen tables (the data
+  content of a :class:`~repro.kernels.block_circulant.plan.BCPlan`) are
+  threaded as ordinary params into *every* bucketed executable, so no
+  prefill/decode trace ever contains an ``rfft(w)`` — exactly one frequency
+  transform per weight per engine lifetime (test-enforced via
+  ``ops.freq_weights_trace_count``). Tile geometry is likewise derived once
+  per layer shape through the lru-cached ``plan_geometry``.
+
+* **Bucketed shapes** — jit recompilation is bounded by rounding every
+  prefill launch to a bucket grid: batch sizes come from ``batch_buckets``
+  (powers of two up to the slot count) and prompt lengths round up to
+  ``prompt_buckets``. A full engine lifetime therefore compiles at most
+  ``len(batch_buckets) · len(prompt_buckets)`` prefill executables plus ONE
+  decode executable (decode always runs at the full slot count). The wave
+  baseline instead recompiles for every distinct wave length it happens to
+  see — unbounded in the workload.
+
+* **Continuous batching** — requests occupy independent cache *slots*; a
+  finished slot admits the next queued request immediately instead of
+  stalling the whole wave on the slowest request (the C-LSTM pipeline
+  overlap argument, arXiv:1803.06305, applied across sequences). Admission
+  order is a :class:`Scheduler` policy (FIFO or shortest-prompt-first), and
+  each request carries its own :class:`SamplingParams` and stop tokens.
+
+Padding correctness: bucketed prefill left-pads prompts and numbers the pad
+positions *negatively* (real tokens are always positions ``0..L-1``). The
+attention mask drops every key with ``kv_pos < 0``, and pad cache writes
+land on ring slots with negative ``pos`` (masked until real tokens overwrite
+them), so bucket padding is invisible to the math: greedy outputs are
+bit-identical across bucket choices, wave sizes, and the B=1 reference loop.
+(Recurrent mixers — mamba/rwkv — carry pad tokens through their state and
+are not pad-invariant; the engine targets attention-family decoders.)
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+import heapq
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,12 +62,35 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 
-__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]
+__all__ = [
+    "make_prefill_step",
+    "make_decode_step",
+    "SamplingParams",
+    "Request",
+    "Scheduler",
+    "EngineStats",
+    "ServeEngine",
+    "WaveEngine",
+    "pow2_buckets",
+    "pick_bucket",
+    "batch_split",
+]
+
+
+# ---------------------------------------------------------------------------
+# Jittable step builders (also used by launch.dryrun)
+# ---------------------------------------------------------------------------
 
 
 def make_prefill_step(model, cfg: ModelConfig):
-    def prefill_step(params, tokens, cache, extra=None):
-        """tokens (B, S) -> (last logits (B, V), filled cache)."""
+    def prefill_step(params, tokens, cache, extra=None, positions=None):
+        """tokens (B, S) -> (last logits (B, V), filled cache).
+
+        ``positions`` (B, S) overrides the default ``0..S-1`` numbering. The
+        bucketed engines pass left-padded rows whose pad positions are
+        *negative*, so padding is masked out of attention (``kv_pos < 0``)
+        and out of the cache instead of leaking into the output.
+        """
         kwargs = {}
         if cfg.family == "vlm" and extra is not None:
             kwargs["img_embeds"] = extra
@@ -32,7 +100,8 @@ def make_prefill_step(model, cfg: ModelConfig):
             )
             return logits[:, -1], new_cache
         logits, new_cache, _ = model.forward(
-            params, tokens, cache=cache, logits_mode="last", **kwargs
+            params, tokens, cache=cache, logits_mode="last",
+            positions=positions, **kwargs
         )
         return logits[:, -1], new_cache
 
@@ -47,61 +116,534 @@ def make_decode_step(model, cfg: ModelConfig):
     return decode_step
 
 
+# ---------------------------------------------------------------------------
+# Shape buckets
+# ---------------------------------------------------------------------------
+
+
+def pow2_buckets(lo: int, hi: int) -> Tuple[int, ...]:
+    """Powers of two from ``lo``, always terminated by ``hi`` itself."""
+    if hi < 1:
+        raise ValueError(f"bucket upper bound must be >= 1, got {hi}")
+    out = []
+    b = max(1, int(lo))
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(int(hi))
+    return tuple(sorted(set(out)))
+
+
+def pick_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"{n} exceeds the largest bucket {max(buckets)}")
+
+
+def batch_split(m: int, buckets: Sequence[int]) -> List[int]:
+    """Greedy decomposition of ``m`` into bucket-sized chunks, largest first.
+
+    ``buckets`` must contain 1 so every m decomposes exactly (the engine's
+    batch buckets always do).
+    """
+    desc = sorted(set(int(b) for b in buckets), reverse=True)
+    out: List[int] = []
+    rem = int(m)
+    while rem > 0:
+        b = next(b for b in desc if b <= rem)
+        out.append(b)
+        rem -= b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Requests, sampling, scheduling
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling. ``temperature <= 0`` means greedy argmax."""
+
+    temperature: float = 0.0
+    top_k: int = 0          # 0 = full vocab
+    seed: int = 0
+
+    def make_rng(self) -> np.random.Generator:
+        return np.random.default_rng(self.seed)
+
+
+def _sample_token(logits: np.ndarray, sp: SamplingParams,
+                  rng: np.random.Generator) -> int:
+    if sp.temperature <= 0.0:
+        return int(np.argmax(logits))
+    z = logits.astype(np.float64) / float(sp.temperature)
+    if 0 < sp.top_k < z.shape[-1]:
+        kth = np.partition(z, -sp.top_k)[-sp.top_k]
+        z = np.where(z >= kth, z, -np.inf)
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(p.shape[-1], p=p))
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray
     max_new: int = 16
-    out: Optional[List[int]] = None
+    stop_tokens: Tuple[int, ...] = ()
+    sampling: SamplingParams = SamplingParams()
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).reshape(-1).shape[0])
+
+
+def _validate_request(r: Request, cache_len: int) -> None:
+    """Shared admission contract: no silent truncation, no zero budgets."""
+    L = r.prompt_len
+    if L == 0:
+        raise ValueError("empty prompt")
+    if r.max_new < 1:
+        raise ValueError(f"max_new must be >= 1, got {r.max_new}")
+    if L > cache_len:
+        raise ValueError(
+            f"prompt length {L} exceeds cache_len={cache_len}: the KV cache "
+            f"cannot hold the prompt (raise cache_len or truncate the prompt)"
+        )
+    # positions written: prompt 0..L-1, then decoded tokens L..L+max_new-2
+    # (the final generated token is returned but never fed back)
+    if L + r.max_new - 1 > cache_len:
+        raise ValueError(
+            f"prompt length {L} + max_new={r.max_new} needs "
+            f"{L + r.max_new - 1} cache positions but cache_len={cache_len}: "
+            f"the ring cache would silently overwrite live context "
+            f"(raise cache_len or lower max_new)"
+        )
+
+
+def _reject_recurrent_mixers(cfg: ModelConfig, what: str) -> None:
+    """Bucketed/wave prefill left-pads prompts; attention masks the pads via
+    negative positions, but recurrent mixers (mamba/rwkv) fold pad tokens
+    into their state — outputs would silently depend on padding. Refuse
+    rather than serve wrong tokens (pad-aware state resets are roadmapped).
+    """
+    for group in cfg.layer_groups():
+        for lspec in group.layers:
+            if lspec.mixer in ("mamba", "rwkv"):
+                raise ValueError(
+                    f"{what} left-pads prompts, and {lspec.mixer!r} layers "
+                    f"carry pad tokens through their recurrent state "
+                    f"(not pad-invariant); serving this family needs "
+                    f"pad-aware state resets"
+                )
+
+
+class Scheduler:
+    """Admission queue: ``fifo`` or ``sjf`` (shortest-prompt-first).
+
+    SJF groups short prompts into the same admission round, which tends to
+    land them in one prefill bucket (fewer, fuller launches); FIFO preserves
+    arrival order. Per-request outputs are identical under either policy —
+    slots are independent — only throughput/latency ordering changes.
+    """
+
+    POLICIES = ("fifo", "sjf")
+
+    def __init__(self, policy: str = "fifo"):
+        if policy not in self.POLICIES:
+            raise ValueError(
+                f"unknown scheduler policy {policy!r}; one of {self.POLICIES}"
+            )
+        self.policy = policy
+        self._heap: list = []
+        self._seq = 0
+
+    def submit(self, item, prompt_len: int) -> None:
+        key = prompt_len if self.policy == "sjf" else 0
+        heapq.heappush(self._heap, (key, self._seq, item))
+        self._seq += 1
+
+    def take(self, n: int) -> list:
+        out = []
+        while self._heap and len(out) < n:
+            out.append(heapq.heappop(self._heap)[2])
+        return out
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+# ---------------------------------------------------------------------------
+# Stats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Lifetime counters (never reset by ``generate``; compile bounds are
+    engine-lifetime properties)."""
+
+    prefill_calls: int = 0
+    decode_steps: int = 0
+    tokens_generated: int = 0
+    requests_completed: int = 0
+    padded_prompt_tokens: int = 0          # bucket-padding waste
+    slot_steps_active: int = 0             # Σ over decode steps of active slots
+    prefill_shapes: Set[Tuple[int, int]] = dataclasses.field(
+        default_factory=set)
+
+    @property
+    def tokens_per_decode_step(self) -> float:
+        """Mean decoded tokens per decode launch — the batching-efficiency
+        signal that carries to hardware (wave stalls push it toward 1·)."""
+        if self.decode_steps == 0:
+            return 0.0
+        return self.slot_steps_active / self.decode_steps
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["prefill_shapes"] = sorted(self.prefill_shapes)
+        d["tokens_per_decode_step"] = self.tokens_per_decode_step
+        return d
+
+
+# ---------------------------------------------------------------------------
+# The continuous-batching engine
+# ---------------------------------------------------------------------------
 
 
 class ServeEngine:
-    """Fixed-slot continuous batching: each slot independently prefills and
-    decodes; finished slots accept the next queued request.
+    """Continuous batching over ``batch`` cache slots with bucketed shapes.
 
-    At construction the engine **freezes the frequency-domain weights**:
-    every circulant table gets its rfft precomputed once
-    (``kernels.block_circulant.plan.freeze_params``) so the jitted prefill /
-    decode steps contain no ``rfft(w)`` — the paper's inference dataflow
-    (FFT(w) resident in BRAM, only activations stream through transforms).
+    * admission is per-slot: a finished slot immediately accepts the next
+      queued request (``Scheduler`` policy), instead of the whole batch
+      waiting for its slowest member;
+    * prefill launches are rounded to ``(batch_bucket, prompt_bucket)``
+      shapes so the engine compiles at most ``max_prefill_variants``
+      prefill executables — decode always runs at the full slot count
+      (exactly one executable);
+    * frozen frequency weights are computed exactly once at construction
+      (``freeze_params``) and shared by every bucketed executable — the
+      paper's BRAM-resident FFT(w), with the jitted steps containing no
+      ``rfft(w)``.
+
+    ``generate`` keeps the original API: a list of :class:`Request` in,
+    per-request token lists out (request order preserved). Greedy outputs
+    are bit-identical to the B=1 one-request-at-a-time loop and to
+    :class:`WaveEngine` — bucket padding is attention-masked, never part of
+    the math.
     """
 
     def __init__(self, model, cfg: ModelConfig, params, batch: int,
-                 cache_len: int):
+                 cache_len: int, *,
+                 prompt_buckets: Optional[Sequence[int]] = None,
+                 policy: str = "fifo"):
+        if cfg.family == "encdec":
+            raise ValueError(
+                "ServeEngine supports decoder-LM families; enc-dec serving "
+                "needs an encoder pass per request (use the dryrun cells)"
+            )
+        _reject_recurrent_mixers(cfg, "bucketed prefill")
+        Scheduler(policy)       # fail fast on unknown policies
         if cfg.swm.enabled:
             from repro.kernels.block_circulant.plan import freeze_params
 
             params = freeze_params(model.specs(), params)
         self.model, self.cfg, self.params = model, cfg, params
-        self.batch, self.cache_len = batch, cache_len
-        self.prefill = jax.jit(make_prefill_step(model, cfg))
-        self.decode = jax.jit(make_decode_step(model, cfg))
+        self.batch, self.cache_len = int(batch), int(cache_len)
+        self.policy = policy
+        if prompt_buckets is None:
+            prompt_buckets = pow2_buckets(min(8, self.cache_len),
+                                          self.cache_len)
+        pb = tuple(sorted(set(int(b) for b in prompt_buckets)))
+        if not pb or pb[0] < 1 or pb[-1] > self.cache_len:
+            raise ValueError(
+                f"prompt_buckets must lie in [1, cache_len={self.cache_len}];"
+                f" got {pb}"
+            )
+        if pb[-1] != self.cache_len:
+            pb = pb + (self.cache_len,)     # every admissible prompt fits
+        self.prompt_buckets = pb
+        self.batch_buckets = pow2_buckets(1, self.batch)
+        self.stats = EngineStats()
+        self._repeat_axes = tuple(
+            1 if g.repeat > 1 else 0 for g in cfg.layer_groups()
+        )
+        # raw (unjitted) fns kept for jaxpr introspection in tests
+        self._prefill_fn = self._prefill_and_place
+        self._decode_fn = make_decode_step(model, cfg)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn)
+        self._reset()
+
+    # -- compile accounting -------------------------------------------------
+    @property
+    def max_prefill_variants(self) -> int:
+        """Upper bound on distinct prefill executables over the lifetime."""
+        return len(self.batch_buckets) * len(self.prompt_buckets)
+
+    @property
+    def prefill_compiles(self) -> int:
+        return int(self._prefill._cache_size())
+
+    @property
+    def decode_compiles(self) -> int:
+        return int(self._decode._cache_size())
+
+    # -- device-side steps --------------------------------------------------
+    def _prefill_and_place(self, params, tokens, positions, cache, slot_idx):
+        """Prefill a bucket-shaped group into fresh rows, then scatter those
+        rows into the persistent slot cache at ``slot_idx``."""
+        B = tokens.shape[0]
+        fresh = self.model.init_cache(B, self.cache_len)
+        logits, filled, _ = self.model.forward(
+            params, tokens, positions=positions, cache=fresh,
+            logits_mode="last",
+        )
+        return logits[:, -1], self._place_cache(cache, filled, slot_idx)
+
+    def _place_cache(self, dst, src, idx):
+        """Scatter per-request cache rows into slot rows. The batch axis is
+        0 for plain groups and 1 for repeat-stacked groups (leading scan
+        axis) — mirroring ``model.init_cache``."""
+        out = []
+        for axis, d_g, s_g in zip(self._repeat_axes, dst, src):
+            def put(d, s, axis=axis):
+                s = s.astype(d.dtype)
+                return (d.at[idx].set(s) if axis == 0
+                        else d.at[:, idx].set(s))
+            out.append(jax.tree.map(put, d_g, s_g))
+        return out
+
+    # -- host-side slot state ----------------------------------------------
+    def _reset(self):
+        B = self.batch
+        self.cache = self.model.init_cache(B, self.cache_len)
+        self._active = np.zeros(B, bool)
+        self._slot_req: List[Optional[int]] = [None] * B
+        self._slot_rng: List[Optional[np.random.Generator]] = [None] * B
+        self._slot_pos = np.zeros(B, np.int32)
+        self._slot_last = np.zeros(B, np.int32)
+        self._slot_left = np.zeros(B, np.int64)
+
+    def _validate(self, r: Request) -> None:
+        _validate_request(r, self.cache_len)
+
+    def _finish(self, slot: int) -> None:
+        self._active[slot] = False
+        self._slot_req[slot] = None
+        self._slot_rng[slot] = None
+        self.stats.requests_completed += 1
+
+    def _push_token(self, slot: int, logits_row: np.ndarray, outs, requests
+                    ) -> None:
+        rid = self._slot_req[slot]
+        r = requests[rid]
+        tok = _sample_token(logits_row, r.sampling, self._slot_rng[slot])
+        if r.stop_tokens and tok in r.stop_tokens:
+            self._finish(slot)
+            return
+        outs[rid].append(tok)
+        self.stats.tokens_generated += 1
+        self._slot_last[slot] = tok
+        self._slot_left[slot] -= 1
+        if self._slot_left[slot] <= 0:
+            self._finish(slot)
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self, sched: Scheduler, outs, requests) -> None:
+        free = [i for i in range(self.batch) if not self._active[i]]
+        n = min(len(free), len(sched))
+        if n == 0:
+            return
+        by_bucket: Dict[int, List[int]] = {}
+        for rid in sched.take(n):
+            Sb = pick_bucket(requests[rid].prompt_len, self.prompt_buckets)
+            by_bucket.setdefault(Sb, []).append(rid)
+        for Sb in sorted(by_bucket):
+            rids = by_bucket[Sb]
+            for Bb in batch_split(len(rids), self.batch_buckets):
+                chunk, rids = rids[:Bb], rids[Bb:]
+                slots = [free.pop(0) for _ in chunk]
+                toks = np.zeros((Bb, Sb), np.int32)
+                pos = np.zeros((Bb, Sb), np.int32)
+                for j, rid in enumerate(chunk):
+                    p = np.asarray(requests[rid].prompt,
+                                   np.int32).reshape(-1)
+                    L = p.shape[0]
+                    toks[j, Sb - L:] = p
+                    # pads get negative positions -> attention-masked
+                    pos[j] = np.arange(Sb, dtype=np.int32) - (Sb - L)
+                    self.stats.padded_prompt_tokens += Sb - L
+                logits, self.cache = self._prefill(
+                    self.params, jnp.asarray(toks), jnp.asarray(pos),
+                    self.cache, jnp.asarray(np.asarray(slots, np.int32)),
+                )
+                self.stats.prefill_calls += 1
+                self.stats.prefill_shapes.add((Bb, Sb))
+                lg = np.asarray(logits)
+                for j, (slot, rid) in enumerate(zip(slots, chunk)):
+                    r = requests[rid]
+                    self._slot_req[slot] = rid
+                    self._slot_rng[slot] = r.sampling.make_rng()
+                    self._slot_pos[slot] = r.prompt_len
+                    self._slot_left[slot] = r.max_new
+                    self._active[slot] = True
+                    self._push_token(slot, lg[j], outs, requests)
+
+    # -- decode -------------------------------------------------------------
+    def _decode_step(self, outs, requests) -> None:
+        act = self._active.copy()
+        if not act.any():
+            return
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._slot_last[:, None]), self.cache,
+            jnp.asarray(self._slot_pos),
+        )
+        self.stats.decode_steps += 1
+        self.stats.slot_steps_active += int(act.sum())
+        self._slot_pos[act] += 1
+        lg = np.asarray(logits)
+        for slot in np.nonzero(act)[0]:
+            self._push_token(int(slot), lg[slot], outs, requests)
+
+    def prewarm(self) -> int:
+        """Compile every (batch-bucket, prompt-bucket) prefill executable
+        plus the decode executable up front, so steady-state serving never
+        recompiles. Possible precisely because the bucket grid is finite —
+        the wave baseline has no analogue (one executable per distinct wave
+        length it happens to see). Returns the number of live executables.
+        """
+        for Sb in self.prompt_buckets:
+            for Bb in self.batch_buckets:
+                toks = jnp.zeros((Bb, Sb), jnp.int32)
+                # all-pad rows (every position negative): fully masked,
+                # mathematically defined, and shape-identical to real traffic
+                pos = (jnp.broadcast_to(jnp.arange(Sb, dtype=jnp.int32),
+                                        (Bb, Sb)) - Sb)
+                slots = jnp.arange(Bb, dtype=jnp.int32)
+                self._prefill(self.params, toks, pos, self.cache, slots)
+        self._decode(
+            self.params, jnp.zeros((self.batch, 1), jnp.int32), self.cache,
+            jnp.zeros((self.batch,), jnp.int32),
+        )
+        return self.prefill_compiles + self.decode_compiles
+
+    # -- public API ---------------------------------------------------------
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        """Serve a list of requests; returns per-request tokens, in request
+        order. Admission interleaves with decoding: slots refill as soon as
+        their request finishes (continuous batching)."""
+        reqs = list(requests)
+        for r in reqs:
+            self._validate(r)
+        sched = Scheduler(self.policy)
+        for rid, r in enumerate(reqs):
+            sched.submit(rid, r.prompt_len)
+        outs: List[List[int]] = [[] for _ in reqs]
+        self._reset()
+        while len(sched) or self._active.any():
+            self._admit(sched, outs, reqs)
+            self._decode_step(outs, reqs)
+        return outs
+
+
+# ---------------------------------------------------------------------------
+# The wave baseline (pre-continuous-batching behavior)
+# ---------------------------------------------------------------------------
+
+
+class WaveEngine:
+    """Fixed-wave batching baseline: requests are served in waves of
+    ``batch``; every wave re-pads to its longest prompt (one recompile per
+    distinct wave length) and every slot stalls until the wave's largest
+    ``max_new`` finishes. Greedy only.
+
+    Kept as the comparison point for ``benchmarks/serve_bench.py`` and the
+    engine-equivalence tests. Shares the masked-padding convention with
+    :class:`ServeEngine` (negative pad positions), so its greedy outputs are
+    bit-identical to the continuous engine — the old implementation let pad
+    tokens leak into attention, which this fixes.
+    """
+
+    def __init__(self, model, cfg: ModelConfig, params, batch: int,
+                 cache_len: int):
+        if int(batch) > 1:
+            # a wave of one never pads; larger waves pad to the wave max
+            _reject_recurrent_mixers(cfg, "wave prefill")
+        if cfg.swm.enabled:
+            from repro.kernels.block_circulant.plan import freeze_params
+
+            params = freeze_params(model.specs(), params)
+        self.model, self.cfg, self.params = model, cfg, params
+        self.batch, self.cache_len = int(batch), int(cache_len)
+        self.stats = EngineStats()
+        self._prefill = jax.jit(make_prefill_step(model, cfg))
+        self._decode = jax.jit(make_decode_step(model, cfg))
+
+    @property
+    def prefill_compiles(self) -> int:
+        return int(self._prefill._cache_size())
+
+    @property
+    def decode_compiles(self) -> int:
+        return int(self._decode._cache_size())
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
-        """Greedy-decode a list of requests in batched waves."""
-        results = []
+        """Greedy-decode a list of requests in fixed batched waves."""
+        for r in requests:
+            _validate_request(r, self.cache_len)
+            if r.sampling.temperature > 0 or r.stop_tokens:
+                raise ValueError(
+                    "WaveEngine is a greedy-only baseline: per-request "
+                    "sampling and stop tokens need ServeEngine"
+                )
+        results: List[List[int]] = []
         for i in range(0, len(requests), self.batch):
-            wave = requests[i : i + self.batch]
-            results.extend(self._run_wave(wave))
+            results.extend(self._run_wave(requests[i: i + self.batch]))
         return results
 
     def _run_wave(self, wave: List[Request]) -> List[List[int]]:
         B = self.batch
-        plen = max(len(r.prompt) for r in wave)
+        plen = max(r.prompt_len for r in wave)
         toks = np.zeros((B, plen), np.int32)
-        for j, r in enumerate(wave):
-            toks[j, plen - len(r.prompt):] = r.prompt    # left-pad
+        pos = np.zeros((B, plen), np.int32)
+        lens = np.zeros(B, np.int32)
+        for j in range(B):
+            L = wave[j].prompt_len if j < len(wave) else 0
+            lens[j] = L
+            if L:
+                toks[j, plen - L:] = np.asarray(
+                    wave[j].prompt, np.int32).reshape(-1)
+            pos[j] = np.arange(plen, dtype=np.int32) - (plen - L)
         cache = self.model.init_cache(B, self.cache_len)
-        logits, cache = self.prefill(self.params, jnp.asarray(toks), cache)
-        outs = [[] for _ in wave]
-        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits, cache = self._prefill(
+            self.params, jnp.asarray(toks), cache, None, jnp.asarray(pos)
+        )
+        self.stats.prefill_calls += 1
+        self.stats.prefill_shapes.add((B, plen))
+        outs: List[List[int]] = [[] for _ in wave]
+        cur = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        for j, r in enumerate(wave):
+            outs[j].append(int(cur[j]))
+            self.stats.tokens_generated += 1
         max_new = max(r.max_new for r in wave)
-        for t in range(max_new):
-            for j, r in enumerate(wave):
-                if t < r.max_new:
-                    outs[j].append(int(cur[j]))
-            pos = jnp.full((B,), plen + t, jnp.int32)
-            logits, cache = self.decode(
-                self.params, cur[:, None], cache, pos
+        for t in range(max_new - 1):
+            logits, cache = self._decode(
+                self.params, jnp.asarray(cur[:, None]), cache,
+                jnp.asarray(lens + t),
             )
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            self.stats.decode_steps += 1
+            self.stats.slot_steps_active += sum(
+                1 for r in wave if t + 1 < r.max_new)
+            cur = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+            for j, r in enumerate(wave):
+                if t + 1 < r.max_new:
+                    outs[j].append(int(cur[j]))
+                    self.stats.tokens_generated += 1
+        for _ in wave:
+            self.stats.requests_completed += 1
         return outs

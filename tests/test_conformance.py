@@ -1,0 +1,148 @@
+"""Cross-layer shape conformance: kernel == plan == multi-plan == oracle.
+
+Pins `block_circulant_matmul` / `BCPlan` / `build_multi_plan` against the
+dense oracle (`ref.block_circulant_matmul_ref`) over a (p, q, k, B) grid
+that includes the shapes serving actually produces: odd k, k=1 (degenerate
+1x1 circulant blocks), block grids that don't divide the tile sizes, B=1
+decode shapes, and Linear layers whose dims don't admit the requested block
+size. Everything runs the Pallas kernel in interpret mode (CPU container).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_circulant import (block_circulant_matmul,
+                                           block_circulant_matmul_multi,
+                                           build_multi_plan, build_plan,
+                                           freq_weights)
+from repro.kernels.block_circulant.ref import (block_circulant_matmul_ref,
+                                               blocks_to_dense)
+
+jax.config.update("jax_platform_name", "cpu")
+
+REL_TOL = 2e-5          # fp32 kernel vs fp32 dense oracle
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32) * scale
+
+
+def _relerr(y, y_ref):
+    return float(jnp.max(jnp.abs(y - y_ref)) /
+                 jnp.maximum(jnp.max(jnp.abs(y_ref)), 1e-6))
+
+
+# k: power-of-two, even non-pow2, odd, and the k=1 degenerate case
+K_GRID = (1, 2, 5, 8, 12)
+# (p, q): square-minimal, rectangular, and p > q (output-heavy)
+PQ_GRID = ((1, 1), (2, 3), (5, 2))
+B_GRID = (1, 4)        # B=1 is the decode shape
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs dense oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", K_GRID)
+@pytest.mark.parametrize("p,q", PQ_GRID)
+@pytest.mark.parametrize("B", B_GRID)
+def test_kernel_matches_oracle(B, p, q, k):
+    w = _rand((p, q, k), seed=1, scale=(q * k) ** -0.5)
+    x = _rand((B, q * k), seed=2)
+    y = block_circulant_matmul(x, w)
+    y_ref = block_circulant_matmul_ref(x, w)
+    assert y.shape == y_ref.shape == (B, p * k)
+    assert _relerr(y, y_ref) <= REL_TOL
+
+
+@pytest.mark.parametrize("k", (1, 5, 12))
+def test_frozen_freq_path_matches_oracle(k):
+    """The w_freq path with explicit k (odd k makes K ambiguous) — the exact
+    form serving uses after freeze_params."""
+    p, q, B = 3, 2, 4
+    w = _rand((p, q, k), seed=1, scale=(q * k) ** -0.5)
+    x = _rand((B, q * k), seed=2)
+    y = block_circulant_matmul(x, None, w_freq=freq_weights(w), k=k, q=q)
+    assert _relerr(y, block_circulant_matmul_ref(x, w)) <= REL_TOL
+
+
+# ---------------------------------------------------------------------------
+# Plans vs oracle (and bitwise vs the per-call kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", K_GRID)
+@pytest.mark.parametrize("p,q", PQ_GRID)
+def test_plan_matches_oracle_and_kernel(p, q, k):
+    B = 3
+    w = _rand((p, q, k), seed=1, scale=(q * k) ** -0.5)
+    x = _rand((B, q * k), seed=2)
+    plan = build_plan(w)
+    y_plan = plan.apply(x)
+    assert _relerr(y_plan, block_circulant_matmul_ref(x, w)) <= REL_TOL
+    # the plan's frozen geometry must not change the math vs the per-call op
+    assert bool(jnp.all(y_plan == block_circulant_matmul(x, w)))
+
+
+@pytest.mark.parametrize("k", (1, 5, 8))
+def test_multi_plan_matches_per_projection(k):
+    """Stacked-p fusion over mixed widths, including B=1 decode shape."""
+    q, ps = 2, (2, 1, 3)
+    ws = [_rand((p, q, k), seed=10 + i, scale=(q * k) ** -0.5)
+          for i, p in enumerate(ps)]
+    mp = build_multi_plan(ws)
+    for B in (1, 4):
+        x = _rand((B, q * k), seed=20 + B)
+        outs = mp.apply_multi(x)
+        fused = block_circulant_matmul_multi(x, ws)
+        for y, y_fused, w in zip(outs, fused, ws):
+            y_ref = block_circulant_matmul_ref(x, w)
+            assert _relerr(y, y_ref) <= REL_TOL
+            assert _relerr(y_fused, y_ref) <= REL_TOL
+
+
+@pytest.mark.parametrize("k", (1, 5, 8))
+def test_b1_decode_shape_with_leading_dims(k):
+    """Decode calls arrive as (B, 1, d) — leading dims must pass through."""
+    p, q = 2, 3
+    w = _rand((p, q, k), seed=1, scale=(q * k) ** -0.5)
+    x = _rand((1, 1, q * k), seed=2)
+    y = block_circulant_matmul(x, w)
+    assert y.shape == (1, 1, p * k)
+    y_ref = block_circulant_matmul_ref(x.reshape(1, -1), w)
+    assert _relerr(y.reshape(1, -1), y_ref) <= REL_TOL
+
+
+# ---------------------------------------------------------------------------
+# Linear-level: dims that don't admit the requested block size
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("in_dim,out_dim,requested,expect_k", [
+    (20, 12, 8, 4),     # gcd fallback: 8 -> 4
+    (9, 6, 8, 3),       # odd fallback: 8 -> 3
+    (7, 5, 8, 1),       # coprime dims -> dense layout (k=1)
+])
+def test_linear_non_divisible_dims(in_dim, out_dim, requested, expect_k):
+    from repro.configs.base import SWMConfig
+    from repro.nn.linear import Linear
+    from repro.nn.module import init_params
+
+    lin = Linear(in_dim=in_dim, out_dim=out_dim, family="ffn",
+                 swm=SWMConfig(block_size=requested, impl="pallas"),
+                 dtype="float32")
+    assert lin.block_size == expect_k
+    params = init_params(lin.specs(), 0)
+    x = _rand((4, in_dim), seed=2)
+    y = lin(params, x)
+    assert y.shape == (4, out_dim)
+    if lin.is_circulant:
+        W = blocks_to_dense(params["w"].astype(jnp.float32))
+        y_ref = x @ W.T
+    else:
+        y_ref = x @ params["w"].astype(jnp.float32)
+    assert _relerr(y, y_ref) <= REL_TOL

@@ -1,0 +1,319 @@
+"""Continuous-batching serve engine: scheduling/bucketing correctness vs the
+one-request-at-a-time reference loop, wave-engine equivalence, the
+compile-budget + freeze-once regression, and cache-overflow errors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SWMConfig
+from repro.models.decoder import HybridDecoderLM
+from repro.nn.module import init_params
+from repro.serve.engine import (Request, SamplingParams, Scheduler,
+                                ServeEngine, WaveEngine, _sample_token,
+                                batch_split, make_decode_step,
+                                make_prefill_step, pick_bucket, pow2_buckets)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(impl="dft", **kw):
+    base = dict(name="eng", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                head_dim=16, d_ff=64, vocab=48, remat="none",
+                param_dtype="float32", compute_dtype="float32",
+                swm=SWMConfig(block_size=8, impl=impl))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = _cfg()
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def engine(lm):
+    cfg, model, params = lm
+    return ServeEngine(model, cfg, params, batch=2, cache_len=32)
+
+
+def _mix(seed, n, vocab=48, plen_hi=11, new_hi=7):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rng.integers(0, vocab,
+                             size=int(rng.integers(1, plen_hi))
+                             ).astype(np.int32),
+                max_new=int(rng.integers(1, new_hi)))
+        for _ in range(n)
+    ]
+
+
+def _reference_loop(model, cfg, params, requests, cache_len):
+    """The gold loop: one request at a time, B=1, no padding, no buckets.
+    Uses the same (frozen) params as the engine so any divergence is the
+    engine's scheduling/bucketing — not numerics."""
+    prefill = jax.jit(make_prefill_step(model, cfg))
+    decode = jax.jit(make_decode_step(model, cfg))
+    outs = []
+    for r in requests:
+        p = np.asarray(r.prompt, np.int32).reshape(-1)
+        cache = model.init_cache(1, cache_len)
+        logits, cache = prefill(params, jnp.asarray(p)[None], cache)
+        lg = np.asarray(logits)[0]
+        rng = r.sampling.make_rng()
+        out, pos = [], len(p)
+        while True:
+            tok = _sample_token(lg, r.sampling, rng)
+            if r.stop_tokens and tok in r.stop_tokens:
+                break
+            out.append(tok)
+            if len(out) >= r.max_new:
+                break
+            logits, cache = decode(params, jnp.asarray([[tok]], np.int32),
+                                   cache, jnp.asarray([pos], np.int32))
+            lg = np.asarray(logits)[0]
+            pos += 1
+        outs.append(out)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Correctness vs the reference loop
+# ---------------------------------------------------------------------------
+
+
+def test_queued_requests_exceed_slots_mixed_lengths(lm, engine):
+    """7 requests through 2 slots, mixed prompt lengths AND budgets: outputs
+    must equal the unbatched reference, in request order."""
+    cfg, model, _ = lm
+    reqs = _mix(0, 7)
+    outs = engine.generate(reqs)
+    assert [len(o) for o in outs] == [r.max_new for r in reqs]
+    assert outs == _reference_loop(model, cfg, engine.params, reqs, 32)
+
+
+def test_stop_tokens_match_reference(lm, engine):
+    cfg, model, _ = lm
+    base = _mix(1, 4, new_hi=8)
+    plain = engine.generate(base)
+    # stop on a token each request actually produces mid-stream
+    reqs = [
+        Request(r.prompt, max_new=r.max_new,
+                stop_tokens=(o[len(o) // 2],) if len(o) > 1 else (-1,))
+        for r, o in zip(base, plain)
+    ]
+    outs = engine.generate(reqs)
+    ref = _reference_loop(model, cfg, engine.params, reqs, 32)
+    assert outs == ref
+    for o, p in zip(outs, plain):
+        assert len(o) <= len(p)
+
+
+def test_sampling_reproducible_and_matches_reference(lm, engine):
+    cfg, model, _ = lm
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(rng.integers(0, 48, size=4).astype(np.int32), max_new=5,
+                sampling=SamplingParams(temperature=0.8, top_k=8, seed=i))
+        for i in range(4)
+    ]
+    a = engine.generate(reqs)
+    b = engine.generate(reqs)
+    assert a == b                       # per-request seeded rng
+    assert a == _reference_loop(model, cfg, engine.params, reqs, 32)
+
+
+def test_policies_produce_identical_outputs(lm, engine):
+    """Slots are independent: sjf vs fifo only reorders admission, never
+    changes any request's tokens."""
+    cfg, model, params = lm
+    reqs = _mix(4, 6)
+    sjf = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                      policy="sjf")
+    assert engine.generate(reqs) == sjf.generate(reqs)
+
+
+def test_wave_and_continuous_identical_greedy(lm):
+    """Acceptance: seeded request mix, wave == continuous, bit-identical."""
+    cfg, model, params = lm
+    reqs = _mix(5, 9, plen_hi=13, new_hi=9)
+    cont = ServeEngine(model, cfg, params, batch=3, cache_len=32)
+    wave = WaveEngine(model, cfg, params, batch=3, cache_len=32)
+    assert cont.generate(reqs) == wave.generate(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Compile budget + freeze-once regression (the plan-cache invariants)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_budget_and_zero_rfft_after_freeze():
+    from repro.kernels.block_circulant import ops
+    from repro.kernels.block_circulant.plan import count_frozen_tables
+
+    cfg = _cfg(impl="pallas")
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+
+    n0 = ops.freq_weights_trace_count()
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=16,
+                      prompt_buckets=(4, 8))
+    n_frozen = count_frozen_tables(eng.params)
+    assert n_frozen > 0
+    # construction freezes each circulant table exactly once
+    assert ops.freq_weights_trace_count() - n0 == n_frozen
+
+    reqs = _mix(6, 5, plen_hi=7, new_hi=4)
+    eng.generate(reqs)
+    eng.generate(_mix(7, 3, plen_hi=4, new_hi=3))
+    # zero rfft(w) across the entire serving lifetime after freeze
+    assert ops.freq_weights_trace_count() - n0 == n_frozen
+
+    # at most len(buckets) executables, decode exactly one
+    assert eng.prefill_compiles <= eng.max_prefill_variants
+    assert eng.prefill_compiles == len(eng.stats.prefill_shapes)
+    assert eng.decode_compiles == 1
+
+    # jaxpr check: no fft primitive in either traced step
+    toks = jnp.zeros((1, 4), jnp.int32)
+    pos = jnp.zeros((1, 4), jnp.int32)
+    slots = jnp.zeros((1,), jnp.int32)
+    jp = jax.make_jaxpr(eng._prefill_fn)(
+        eng.params, toks, pos, eng.cache, slots)
+    assert "fft" not in str(jp)
+    jd = jax.make_jaxpr(eng._decode_fn)(
+        eng.params, jnp.zeros((2, 1), jnp.int32), eng.cache,
+        jnp.zeros((2,), jnp.int32))
+    assert "fft" not in str(jd)
+
+
+def test_prewarm_compiles_every_bucket_then_serves_compile_free(lm):
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                      prompt_buckets=(8, 16))
+    eng.prewarm()
+    assert eng.prefill_compiles == eng.max_prefill_variants
+    assert eng.decode_compiles == 1
+    eng.generate(_mix(8, 5))
+    assert eng.prefill_compiles == eng.max_prefill_variants
+    assert eng.decode_compiles == 1
+
+
+# ---------------------------------------------------------------------------
+# Cache-overflow validation (no silent truncation)
+# ---------------------------------------------------------------------------
+
+
+def test_prompt_exceeding_cache_len_raises(lm, engine):
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        engine.generate([Request(np.arange(40, dtype=np.int32), max_new=1)])
+
+
+def test_prompt_plus_max_new_exceeding_cache_len_raises(lm, engine):
+    with pytest.raises(ValueError, match="ring cache would silently"):
+        engine.generate([Request(np.arange(20, dtype=np.int32), max_new=20)])
+    # boundary: the final token is returned but never written back, so
+    # L + max_new - 1 == cache_len is servable
+    outs = engine.generate([Request(np.arange(20, dtype=np.int32),
+                                    max_new=13)])
+    assert len(outs[0]) == 13
+
+
+def test_wave_engine_also_validates(lm):
+    cfg, model, params = lm
+    wave = WaveEngine(model, cfg, params, batch=2, cache_len=32)
+    with pytest.raises(ValueError, match="exceeds"):
+        wave.generate([Request(np.arange(40, dtype=np.int32), max_new=1)])
+
+
+def test_degenerate_requests_raise(lm, engine):
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.generate([Request(np.zeros((0,), np.int32))])
+    with pytest.raises(ValueError, match="max_new"):
+        engine.generate([Request(np.arange(3, dtype=np.int32), max_new=0)])
+    # WaveEngine shares the same admission contract
+    cfg, model, params = lm
+    wave = WaveEngine(model, cfg, params, batch=2, cache_len=32)
+    with pytest.raises(ValueError, match="max_new"):
+        wave.generate([Request(np.arange(3, dtype=np.int32), max_new=0)])
+
+
+def test_wave_engine_is_greedy_only(lm):
+    cfg, model, params = lm
+    wave = WaveEngine(model, cfg, params, batch=2, cache_len=32)
+    with pytest.raises(ValueError, match="greedy-only"):
+        wave.generate([Request(np.arange(3, dtype=np.int32), max_new=2,
+                               sampling=SamplingParams(temperature=0.5))])
+    with pytest.raises(ValueError, match="greedy-only"):
+        wave.generate([Request(np.arange(3, dtype=np.int32), max_new=2,
+                               stop_tokens=(1,))])
+
+
+def test_recurrent_mixers_rejected():
+    """Pad tokens pollute recurrent state — serving must refuse, not emit
+    silently padding-dependent tokens."""
+    from repro.configs.base import LayerGroup, LayerSpec
+
+    cfg = _cfg(n_layers=1, rwkv_head_dim=16, rwkv_decay_lora=8,
+               rwkv_mix_lora=8,
+               groups=(LayerGroup(
+                   layers=(LayerSpec(mixer="rwkv", ffn="dense"),),
+                   repeat=1),))
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+    with pytest.raises(ValueError, match="recurrent state"):
+        ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    with pytest.raises(ValueError, match="recurrent state"):
+        WaveEngine(model, cfg, params, batch=2, cache_len=32)
+    # a wave of one never pads: still allowed
+    WaveEngine(model, cfg, params, batch=1, cache_len=32)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / bucket unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_orders():
+    fifo = Scheduler("fifo")
+    sjf = Scheduler("sjf")
+    for name, plen in (("a", 5), ("b", 1), ("c", 3)):
+        fifo.submit(name, plen)
+        sjf.submit(name, plen)
+    assert fifo.take(3) == ["a", "b", "c"]
+    assert sjf.take(3) == ["b", "c", "a"]
+    with pytest.raises(ValueError):
+        Scheduler("lifo")
+
+
+def test_bucket_helpers():
+    assert pow2_buckets(8, 64) == (8, 16, 32, 64)
+    assert pow2_buckets(8, 48) == (8, 16, 32, 48)
+    assert pow2_buckets(1, 1) == (1,)
+    assert pick_bucket(9, (8, 16, 32)) == 16
+    assert pick_bucket(8, (8, 16, 32)) == 8
+    with pytest.raises(ValueError):
+        pick_bucket(33, (8, 16, 32))
+    assert batch_split(7, (1, 2, 4)) == [4, 2, 1]
+    assert batch_split(4, (1, 2, 4)) == [4]
+    # any m <= slot count decomposes exactly
+    for m in range(1, 17):
+        assert sum(batch_split(m, (1, 2, 4, 8))) == m
+
+
+def test_stats_accounting(lm):
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    reqs = _mix(9, 4)
+    outs = eng.generate(reqs)
+    s = eng.stats
+    assert s.tokens_generated == sum(len(o) for o in outs)
+    assert s.requests_completed == len(reqs)
+    assert s.prefill_calls >= 1 and s.decode_steps >= 1
+    assert 0.0 < s.tokens_per_decode_step <= eng.batch
+    d = s.as_dict()
+    assert d["prefill_shapes"] == sorted(s.prefill_shapes)
