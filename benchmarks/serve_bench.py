@@ -1,21 +1,34 @@
-"""Serving throughput: continuous-batching engine vs the wave baseline.
+"""Serving throughput: continuous-batching engine vs the wave baseline,
+plus decode-side slot compaction vs full-slot decode.
 
-Runs the same seeded mixed-length / mixed-budget request workload through
-``ServeEngine`` (per-slot admission, bucketed prefill shapes) and
+Runs the same seeded request workload through ``ServeEngine`` (per-slot
+admission, bucketed prefill shapes, compacted decode) in two decode
+configurations — bucketed (default pow2 ``decode_buckets``) and full-slot
+(``decode_buckets=(batch,)``, the pre-compaction behavior) — and through
 ``WaveEngine`` (fixed waves, stall-on-slowest), and reports:
 
   * tokens/sec (CPU wall time in this container — labeled as such),
   * tokens per decode step — the batching-efficiency signal that carries to
     hardware: the wave engine idles slots until the wave's largest max_new
     finishes, the continuous engine refills them;
+  * decode rows per generated token — the decode-side work amplification:
+    full-slot decode pays ``batch`` FFT -> o -> IFFT rows per step whatever
+    the occupancy, compaction pays the bucket that holds the active set;
   * recompile counts — wave prefill recompiles per distinct wave length
     (unbounded in the workload), the continuous engine is bounded by its
-    bucket grid (``max_prefill_variants``).
+    bucket grids on both the prefill and decode paths.
 
-Greedy outputs of the two engines are asserted identical before timing is
-reported (same frozen-FFT(w) math, different orchestration).
+Two workloads: ``mixed`` (mixed prompt lengths and budgets — where wave
+batching stalls) and ``tail`` (tail-heavy: a few long-budget requests
+outlive many short ones, so the batch drains to 1-2 live slots — where
+full-slot decode burns dead rows). Greedy outputs of every engine are
+asserted identical before timing is reported (same frozen-FFT(w) math,
+different orchestration); on the tail workload the bucketed engine must
+show strictly lower decode row-work per token than full-slot decode.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --json out.json
+    PYTHONPATH=src python benchmarks/serve_bench.py --quick --workload tail \
+        --json out_tail.json
 """
 
 from __future__ import annotations
@@ -42,7 +55,7 @@ def _cfg() -> ModelConfig:
     )
 
 
-def _workload(n_requests: int, cache_len: int, seed: int):
+def _workload_mixed(n_requests: int, cache_len: int, seed: int):
     """Mixed prompt lengths AND mixed generation budgets — the shape of
     traffic where wave batching stalls (every wave runs to its max max_new
     at its max prompt length)."""
@@ -58,6 +71,32 @@ def _workload(n_requests: int, cache_len: int, seed: int):
     return reqs
 
 
+def _workload_tail(n_requests: int, cache_len: int, seed: int):
+    """Tail-heavy: most requests have tiny budgets, every 4th runs long —
+    once the short ones finish and the queue empties, 1-2 live slots remain
+    and full-slot decode pays ``batch`` rows for each of their tokens."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(2, 13))
+        if i % 4 == 0:
+            # long budget, clamped so plen + max_new - 1 <= cache_len stays
+            # servable even at small --cache-len values
+            cap = cache_len - plen + 1
+            lo = max(2, min(cache_len // 2, cap - 1))
+            max_new = int(rng.integers(lo, max(lo + 1, cap)))
+        else:
+            max_new = int(rng.integers(2, 5))
+        reqs.append(Request(
+            rng.integers(0, 128, size=plen).astype(np.int32),
+            max_new=max_new,
+        ))
+    return reqs
+
+
+WORKLOADS = {"mixed": _workload_mixed, "tail": _workload_tail}
+
+
 def _run(engine, warmup, reqs):
     """Warm the jit caches on a separate seeded mix, then time the measured
     workload (steady-state serving throughput). Compile counts are reported
@@ -66,12 +105,15 @@ def _run(engine, warmup, reqs):
     engine.generate(warmup)
     c0, s0 = engine.prefill_compiles, engine.stats.decode_steps
     a0, p0 = engine.stats.slot_steps_active, engine.stats.prefill_calls
+    r0, t0 = engine.stats.decode_rows, engine.stats.tokens_generated
     t_start = time.perf_counter()
     outs = engine.generate(reqs)
     dt = time.perf_counter() - t_start
     tokens = sum(len(o) for o in outs)
     decode_steps = engine.stats.decode_steps - s0
     active = engine.stats.slot_steps_active - a0
+    decode_rows = engine.stats.decode_rows - r0
+    gen_tokens = engine.stats.tokens_generated - t0
     return outs, {
         "tokens": tokens,
         "seconds": dt,
@@ -79,6 +121,9 @@ def _run(engine, warmup, reqs):
         "decode_steps": decode_steps,
         "prefill_calls": engine.stats.prefill_calls - p0,
         "tokens_per_decode_step": active / max(decode_steps, 1),
+        "decode_rows": decode_rows,
+        "decode_rows_per_token": decode_rows / max(gen_tokens, 1),
+        "decode_shapes": sorted(engine.stats.decode_shapes),
         "prefill_compiles_measured": engine.prefill_compiles - c0,
         "prefill_compiles": engine.prefill_compiles,
         "decode_compiles": engine.decode_compiles,
@@ -87,30 +132,51 @@ def _run(engine, warmup, reqs):
 
 
 def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
-        seed: int = 0, json_path: str = ""):
+        seed: int = 0, workload: str = "mixed", json_path: str = ""):
     cfg = _cfg()
     model = HybridDecoderLM(cfg)
     params = init_params(model.specs(), 0)
-    reqs = _workload(n_requests, cache_len, seed)
-    warmup = _workload(max(4, n_requests // 4), cache_len, seed + 1)
+    make = WORKLOADS[workload]
+    reqs = make(n_requests, cache_len, seed)
+    warmup = make(max(4, n_requests // 4), cache_len, seed + 1)
 
     wave = WaveEngine(model, cfg, params, batch=batch, cache_len=cache_len)
     outs_w, row_w = _run(wave, warmup, reqs)
+    # full-slot decode: the PR-2 engine (decode always at the slot count)
+    full = ServeEngine(model, cfg, params, batch=batch, cache_len=cache_len,
+                       decode_buckets=(batch,))
+    full.prewarm()
+    outs_f, row_f = _run(full, warmup, reqs)
+    # compacted decode: active slots gather into the smallest pow2 bucket
     cont = ServeEngine(model, cfg, params, batch=batch, cache_len=cache_len)
-    cont.prewarm()        # finite bucket grid -> compile everything up front
+    cont.prewarm()        # finite bucket grids -> compile everything up front
     outs_c, row_c = _run(cont, warmup, reqs)
 
     assert outs_c == outs_w, "continuous and wave greedy outputs diverged"
-    row_c["max_prefill_variants"] = cont.max_prefill_variants
-    row_c["batch_buckets"] = list(cont.batch_buckets)
-    row_c["prompt_buckets"] = list(cont.prompt_buckets)
+    assert outs_c == outs_f, "bucketed and full-slot decode outputs diverged"
+    for eng, row in ((full, row_f), (cont, row_c)):
+        row["max_prefill_variants"] = eng.max_prefill_variants
+        row["max_decode_variants"] = eng.max_decode_variants
+        row["batch_buckets"] = list(eng.batch_buckets)
+        row["prompt_buckets"] = list(eng.prompt_buckets)
+        row["decode_buckets"] = list(eng.decode_buckets)
+
+    row_work_drop = (row_f["decode_rows_per_token"]
+                     / max(row_c["decode_rows_per_token"], 1e-9))
+    if workload == "tail":
+        assert (row_c["decode_rows_per_token"]
+                < row_f["decode_rows_per_token"]), (
+            "decode compaction must strictly drop row-work per token on the "
+            "tail-heavy workload"
+        )
 
     report = {
-        "workload": {"n_requests": n_requests, "batch": batch,
-                     "cache_len": cache_len, "seed": seed,
+        "workload": {"name": workload, "n_requests": n_requests,
+                     "batch": batch, "cache_len": cache_len, "seed": seed,
                      "total_tokens": row_c["tokens"],
                      "host": "cpu-interpret"},
         "wave": row_w,
+        "continuous_full_slot": row_f,
         "continuous": row_c,
         "equal_greedy_outputs": True,
         "speedup_tokens_per_sec":
@@ -118,21 +184,26 @@ def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
         "speedup_tokens_per_decode_step":
             row_c["tokens_per_decode_step"]
             / max(row_w["tokens_per_decode_step"], 1e-9),
+        "decode_row_work_drop_vs_full_slot": row_work_drop,
     }
-    for name, row in (("wave", row_w), ("continuous", row_c)):
-        emit(f"serve/{name}_B{batch}_N{n_requests}",
+    for name, row in (("wave", row_w), ("full_slot", row_f),
+                      ("continuous", row_c)):
+        emit(f"serve/{name}_B{batch}_N{n_requests}_{workload}",
              row["seconds"] * 1e6,
              f"tok_s={row['tokens_per_sec']:.1f};"
              f"tok_per_decode_step={row['tokens_per_decode_step']:.2f};"
+             f"decode_rows_per_token={row['decode_rows_per_token']:.2f};"
              f"decode_steps={row['decode_steps']};"
              f"prefill_compiles_measured={row['prefill_compiles_measured']};"
              f"prefill_compiles={row['prefill_compiles']};"
              f"decode_compiles={row['decode_compiles']};host=cpu")
-    emit("serve/speedup", 0.0,
+    emit(f"serve/speedup_{workload}", 0.0,
          f"tokens_per_sec={report['speedup_tokens_per_sec']:.2f}x;"
          f"tokens_per_decode_step="
          f"{report['speedup_tokens_per_decode_step']:.2f}x;"
-         f"recompile_bound={row_c['max_prefill_variants']};"
+         f"decode_row_work_drop={row_work_drop:.2f}x;"
+         f"recompile_bound={row_c['max_prefill_variants']}"
+         f"+{row_c['max_decode_variants']};"
          f"equal_outputs=True")
     if json_path:
         with open(json_path, "w") as f:
@@ -146,6 +217,10 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="small workload (CI artifact)")
     ap.add_argument("--json", default="", help="write the report as JSON")
+    ap.add_argument("--workload", choices=sorted(WORKLOADS),
+                    default="mixed",
+                    help="mixed: wave-stalling traffic; tail: tail-heavy "
+                         "traffic where decode compaction pays off")
     ap.add_argument("--n-requests", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)
@@ -153,7 +228,7 @@ def main():
     args = ap.parse_args()
     n = args.n_requests or (12 if args.quick else 32)
     run(n_requests=n, batch=args.batch, cache_len=args.cache_len,
-        seed=args.seed, json_path=args.json)
+        seed=args.seed, workload=args.workload, json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Serving demo: train a tiny SWM LM briefly, then serve a mixed-length,
 mixed-budget request batch through the continuous-batching engine —
-per-slot admission, bucketed prefill shapes, per-request sampling and
-stop tokens (prefill -> decode, frozen FFT(w)).
+per-slot admission, bucketed prefill shapes, compacted decode buckets,
+per-request sampling and stop tokens (prefill -> decode, frozen FFT(w)) —
+and finish with the streaming submit()/step()/poll()/drain() API serving
+an open-ended trickle of requests.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -34,11 +36,14 @@ def main():
         state, metrics = step(state, data.batch_jax(s))
     print(f"trained 120 steps, final loss {float(metrics['loss']):.3f}")
 
-    # 4 slots, prompt buckets 8/16 — the engine admits a request the moment
-    # a slot frees up, so the short-budget requests below don't stall the
-    # long ones (and vice versa).
+    # 4 slots, prompt buckets 8/16, decode buckets 1/2/4 — the engine admits
+    # a request the moment a slot frees up, so the short-budget requests
+    # below don't stall the long ones (and vice versa), and once the batch
+    # tails off, decode gathers the survivors into a smaller bucket instead
+    # of stepping all 4 slot rows.
     engine = ServeEngine(model, cfg, state["params"], batch=4, cache_len=64,
-                         prompt_buckets=(8, 16), policy="sjf")
+                         prompt_buckets=(8, 16), decode_buckets=(1, 2, 4),
+                         policy="sjf")
     # prompts drawn from the training distribution: the model should
     # continue the +1..+6 drift pattern it learned
     prompts = [np.array([5, 9, 14, 18, 21], np.int32),
@@ -66,9 +71,28 @@ def main():
     s = engine.stats
     print(f"prefill shapes {sorted(s.prefill_shapes)} "
           f"({engine.prefill_compiles} compiles, bound "
-          f"{engine.max_prefill_variants}); decode compiles "
-          f"{engine.decode_compiles}; tokens/decode-step "
-          f"{s.tokens_per_decode_step:.2f}")
+          f"{engine.max_prefill_variants}); decode shapes "
+          f"{sorted(s.decode_shapes)} ({engine.decode_compiles} compiles, "
+          f"bound {engine.max_decode_variants}); tokens/decode-step "
+          f"{s.tokens_per_decode_step:.2f}; decode-rows/token "
+          f"{s.decode_rows_per_token:.2f}")
+
+    # --- streaming: an open-ended trickle instead of a closed batch -------
+    # submit() hands back a request id immediately; step() advances the
+    # engine one admission+decode round; poll() snapshots partial tokens;
+    # drain() finishes the stragglers and claims their outputs.
+    print("\nstreaming trickle:")
+    rids = []
+    for i, p in enumerate(prompts[:4]):
+        rid = engine.submit(Request(p, max_new=4 + 2 * i))
+        rids.append(rid)
+        engine.step()                       # requests decode while we submit
+        v = engine.poll(rid)
+        print(f"  submitted req {rid}; poll -> done={v.done} "
+              f"tokens={list(v.tokens)}")
+    done = engine.drain(rids)
+    for rid in rids:
+        print(f"  req {rid} finished: {done[rid]}")
 
 
 if __name__ == "__main__":

@@ -2,11 +2,15 @@
 through the continuous-batching engine (or the wave baseline).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --batch 4 --cache-len 64 --prompt-buckets 8,16,32 --policy sjf
+        --batch 4 --cache-len 64 --prompt-buckets 8,16,32 \
+        --decode-buckets 1,2,4 --policy sjf
 
-The engine rounds prefill launches to (batch-bucket, prompt-bucket) shapes
-(bounded jit recompilation) and freezes the circulant frequency weights
-once at load — see repro.serve.engine for the serving model.
+The engine rounds prefill launches to (batch-bucket, prompt-bucket) shapes,
+compacts decode launches to the smallest decode bucket holding the active
+slots (bounded jit recompilation on both paths), and freezes the circulant
+frequency weights once at load — see repro.serve.engine for the serving
+model. ``--stream`` demos the open-ended submit()/step()/poll()/drain()
+API instead of the closed generate() call.
 """
 
 from __future__ import annotations
@@ -22,6 +26,18 @@ from repro.launch.specs import build_model
 from repro.nn.module import init_params
 from repro.serve.engine import (Request, SamplingParams, Scheduler,
                                 ServeEngine, WaveEngine)
+
+
+def _parse_buckets(ap: argparse.ArgumentParser, text: str, flag: str):
+    """Comma-separated bucket list -> tuple of ints, malformed input (empty
+    fields from trailing commas, non-integers) routed through ap.error with
+    the offending string instead of a raw ValueError traceback."""
+    if not text:
+        return None
+    try:
+        return tuple(int(tok) for tok in text.split(","))
+    except ValueError:
+        ap.error(f"{flag} must be comma-separated ints, got {text!r}")
 
 
 def main():
@@ -41,6 +57,15 @@ def main():
     ap.add_argument("--prompt-buckets", default="",
                     help="comma-separated prompt-length buckets, e.g. "
                          "8,16,32 (default: powers of two up to cache-len)")
+    ap.add_argument("--decode-buckets", default="",
+                    help="comma-separated decode batch buckets, e.g. 1,2,4 "
+                         "(default: powers of two up to --batch); active "
+                         "slots are compacted into the smallest bucket that "
+                         "holds them before each decode launch")
+    ap.add_argument("--stream", action="store_true",
+                    help="demo the streaming submit()/step()/poll()/drain() "
+                         "API: requests trickle in while the engine runs "
+                         "(continuous engine only)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -55,8 +80,9 @@ def main():
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
-    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        step = latest_step(args.ckpt_dir)
+    # one directory scan per load (latest_step used to run twice)
+    step = latest_step(args.ckpt_dir) if args.ckpt_dir else None
+    if step is not None:
         state = restore_checkpoint(args.ckpt_dir, step)
         params = state["params"]
         print(f"restored checkpoint step {step}")
@@ -64,25 +90,37 @@ def main():
         params = init_params(model.specs(), 0)
         print("serving freshly initialized params (demo mode)")
 
+    prompt_buckets = _parse_buckets(ap, args.prompt_buckets,
+                                    "--prompt-buckets")
+    decode_buckets = _parse_buckets(ap, args.decode_buckets,
+                                    "--decode-buckets")
     if args.engine == "wave":
         if args.temperature > 0 or args.top_k or args.stop_token:
             ap.error("--engine wave is a greedy-only baseline; "
                      "--temperature/--top-k/--stop-token need the "
                      "continuous engine")
-        if args.prompt_buckets or args.policy != "fifo" or args.prewarm:
-            ap.error("--prompt-buckets/--policy/--prewarm only apply to "
-                     "the continuous engine")
+        if (args.prompt_buckets or args.decode_buckets
+                or args.policy != "fifo" or args.prewarm or args.stream):
+            ap.error("--prompt-buckets/--decode-buckets/--policy/--prewarm/"
+                     "--stream only apply to the continuous engine")
         engine = WaveEngine(model, cfg, params, batch=args.batch,
                             cache_len=args.cache_len)
     else:
-        buckets = ([int(b) for b in args.prompt_buckets.split(",")]
-                   if args.prompt_buckets else None)
-        engine = ServeEngine(model, cfg, params, batch=args.batch,
-                             cache_len=args.cache_len,
-                             prompt_buckets=buckets, policy=args.policy)
+        try:
+            engine = ServeEngine(model, cfg, params, batch=args.batch,
+                                 cache_len=args.cache_len,
+                                 prompt_buckets=prompt_buckets,
+                                 decode_buckets=decode_buckets,
+                                 policy=args.policy)
+        except ValueError as e:
+            if "_buckets" in str(e):
+                ap.error(str(e))
+            raise
         print(f"buckets: batch={engine.batch_buckets} "
               f"prompt={engine.prompt_buckets} "
-              f"(<= {engine.max_prefill_variants} prefill executables)")
+              f"decode={engine.decode_buckets} "
+              f"(<= {engine.max_prefill_variants} prefill + "
+              f"{engine.max_decode_variants} decode executables)")
         if args.prewarm:
             n = engine.prewarm()
             print(f"prewarmed {n} executables")
@@ -101,15 +139,35 @@ def main():
         for _ in range(args.n_requests)
     ]
     t0 = time.perf_counter()
-    outs = engine.generate(reqs)
+    if args.stream:
+        # open-ended serving: trickle submissions in while the engine steps,
+        # poll for incremental tokens, then drain the stragglers
+        rids = []
+        for i, r in enumerate(reqs):
+            rid = engine.submit(r)
+            rids.append(rid)
+            engine.step()
+            v = engine.poll(rid)
+            print(f"submitted req {rid} (prompt_len={r.prompt_len}); "
+                  f"poll -> done={v.done} tokens={list(v.tokens)}")
+        done = engine.drain(rids)
+        outs = [done[rid] for rid in rids]
+    else:
+        outs = engine.generate(reqs)
     dt = time.perf_counter() - t0
     for i, o in enumerate(outs):
         print(f"request {i}: {o}")
     n_tok = sum(len(o) for o in outs)
+    extra = ""
+    if args.engine == "continuous":
+        extra = (f" decode-shapes={sorted(engine.stats.decode_shapes)}"
+                 f" decode-rows/token="
+                 f"{engine.stats.decode_rows_per_token:.2f}")
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
           f"prefill compiles={engine.prefill_compiles} "
           f"decode compiles={engine.decode_compiles} "
-          f"tokens/decode-step={engine.stats.tokens_per_decode_step:.2f}")
+          f"tokens/decode-step={engine.stats.tokens_per_decode_step:.2f}"
+          f"{extra}")
 
 
 if __name__ == "__main__":

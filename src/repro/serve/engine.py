@@ -25,20 +25,41 @@ of that split, applied at three levels:
   per layer shape through the lru-cached ``plan_geometry``.
 
 * **Bucketed shapes** — jit recompilation is bounded by rounding every
-  prefill launch to a bucket grid: batch sizes come from ``batch_buckets``
-  (powers of two up to the slot count) and prompt lengths round up to
-  ``prompt_buckets``. A full engine lifetime therefore compiles at most
-  ``len(batch_buckets) · len(prompt_buckets)`` prefill executables plus ONE
-  decode executable (decode always runs at the full slot count). The wave
-  baseline instead recompiles for every distinct wave length it happens to
-  see — unbounded in the workload.
+  launch to a bucket grid: prefill batch sizes come from ``batch_buckets``
+  (powers of two up to the slot count), prompt lengths round up to
+  ``prompt_buckets``, and *decode* launches compact the active slots into
+  the smallest ``decode_buckets`` batch that holds them. A full engine
+  lifetime therefore compiles at most
+  ``len(batch_buckets) · len(prompt_buckets)`` prefill executables plus
+  ``len(decode_buckets)`` decode executables (``prewarm()`` compiles them
+  all up front). The wave baseline instead recompiles for every distinct
+  wave length it happens to see — unbounded in the workload.
 
-* **Continuous batching** — requests occupy independent cache *slots*; a
-  finished slot admits the next queued request immediately instead of
-  stalling the whole wave on the slowest request (the C-LSTM pipeline
-  overlap argument, arXiv:1803.06305, applied across sequences). Admission
-  order is a :class:`Scheduler` policy (FIFO or shortest-prompt-first), and
-  each request carries its own :class:`SamplingParams` and stop tokens.
+* **Decode-side slot compaction** — the paper's throughput argument (and
+  CirCNN's, arXiv:1708.08917) is that no FFT → ∘ → IFFT lane ever carries
+  dead data. Before each decode launch the engine gathers the *active*
+  slots' cache rows, last tokens, and positions into a bucket-shaped
+  sub-batch, decodes there, and scatters logits and cache rows back. In the
+  tail of a batch one live request pays for ``pick_bucket(1)`` rows of
+  work, not ``batch`` rows (``EngineStats.decode_rows`` /
+  ``decode_rows_per_token`` make the saving measurable). Compaction is a
+  pure permutation of slot rows — never part of the math — so greedy
+  outputs are bit-identical to full-slot decode (``decode_buckets=(batch,)``
+  restores the old behavior exactly).
+
+* **Continuous batching, streamed** — requests occupy independent cache
+  *slots*; a finished slot admits the next queued request immediately
+  instead of stalling the whole wave on the slowest request (the C-LSTM
+  pipeline overlap argument, arXiv:1803.06305, applied across sequences).
+  Admission order is a :class:`Scheduler` policy (FIFO or
+  shortest-prompt-first), and each request carries its own
+  :class:`SamplingParams` and stop tokens. The engine serves an open-ended
+  stream: ``submit(request)`` returns a request id, ``step()`` advances
+  admission + one decode round, ``poll(req_id)`` snapshots progress
+  without consuming it, and ``drain()`` runs the loop to idle and claims
+  finished outputs. ``generate(list)`` is a thin wrapper over that loop
+  (submit all, drain, reorder) — slot state persists across calls instead
+  of being reset.
 
 Padding correctness: bucketed prefill left-pads prompts and numbers the pad
 positions *negatively* (real tokens are always positions ``0..L-1``). The
@@ -67,6 +88,7 @@ __all__ = [
     "make_decode_step",
     "SamplingParams",
     "Request",
+    "RequestState",
     "Scheduler",
     "EngineStats",
     "ServeEngine",
@@ -74,6 +96,7 @@ __all__ = [
     "pow2_buckets",
     "pick_bucket",
     "batch_split",
+    "validate_buckets",
 ]
 
 
@@ -146,16 +169,39 @@ def batch_split(m: int, buckets: Sequence[int]) -> List[int]:
     """Greedy decomposition of ``m`` into bucket-sized chunks, largest first.
 
     ``buckets`` must contain 1 so every m decomposes exactly (the engine's
-    batch buckets always do).
+    batch buckets always do); a list that cannot cover the remainder raises
+    ``ValueError`` naming the offending buckets.
     """
     desc = sorted(set(int(b) for b in buckets), reverse=True)
     out: List[int] = []
     rem = int(m)
     while rem > 0:
-        b = next(b for b in desc if b <= rem)
+        b = next((b for b in desc if b <= rem), None)
+        if b is None:
+            raise ValueError(
+                f"batch buckets {sorted(desc)} cannot decompose {m}: no "
+                f"bucket <= remainder {rem} (include 1 in the bucket list)"
+            )
         out.append(b)
         rem -= b
     return out
+
+
+def validate_buckets(name: str, buckets: Sequence[int], hi: int,
+                     *, require_hi: bool = True) -> Tuple[int, ...]:
+    """Normalize a user-supplied bucket list: sorted unique ints in
+    ``[1, hi]``, with ``hi`` itself appended when ``require_hi`` so every
+    admissible size maps to a bucket. Raises ``ValueError`` naming the
+    bucket list otherwise (construction-time — never mid-serving)."""
+    try:
+        bk = tuple(sorted(set(int(b) for b in buckets)))
+    except (TypeError, ValueError):
+        raise ValueError(f"{name} must be a sequence of ints; got {buckets!r}")
+    if not bk or bk[0] < 1 or bk[-1] > hi:
+        raise ValueError(f"{name} must lie in [1, {hi}]; got {bk}")
+    if require_hi and bk[-1] != hi:
+        bk = bk + (hi,)
+    return bk
 
 
 # ---------------------------------------------------------------------------
@@ -180,9 +226,22 @@ def _sample_token(logits: np.ndarray, sp: SamplingParams,
     if sp.temperature <= 0.0:
         return int(np.argmax(logits))
     z = logits.astype(np.float64) / float(sp.temperature)
-    if 0 < sp.top_k < z.shape[-1]:
+    vocab = z.shape[-1]
+    # top_k == 0 or top_k >= vocab both mean the full vocabulary survives
+    if 0 < sp.top_k < vocab:
+        # exactly top_k candidates, ties at the k-th value broken
+        # deterministically toward the lower token id (a `z >= kth` mask
+        # would keep every tied candidate — more than top_k survivors).
+        # O(V): everything strictly above the k-th value survives, then the
+        # lowest-id threshold ties fill the remaining seats (nonzero
+        # returns ascending indices).
         kth = np.partition(z, -sp.top_k)[-sp.top_k]
-        z = np.where(z >= kth, z, -np.inf)
+        above = np.nonzero(z > kth)[0]
+        ties = np.nonzero(z == kth)[0]
+        keep = np.concatenate([above, ties[: sp.top_k - above.size]])
+        masked = np.full_like(z, -np.inf)
+        masked[keep] = z[keep]
+        z = masked
     z = z - z.max()
     p = np.exp(z)
     p /= p.sum()
@@ -194,11 +253,26 @@ class Request:
     prompt: np.ndarray
     max_new: int = 16
     stop_tokens: Tuple[int, ...] = ()
-    sampling: SamplingParams = SamplingParams()
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+
+    def __post_init__(self):
+        # accept any iterable of token ids but store a tuple, so equality,
+        # hashing of the field, and `tok in stop_tokens` behave uniformly
+        self.stop_tokens = tuple(int(t) for t in self.stop_tokens)
 
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.prompt).reshape(-1).shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestState:
+    """``poll`` snapshot: tokens generated so far and completion flag."""
+
+    req_id: int
+    done: bool
+    tokens: Tuple[int, ...]
 
 
 def _validate_request(r: Request, cache_len: int) -> None:
@@ -292,8 +366,10 @@ class EngineStats:
     requests_completed: int = 0
     padded_prompt_tokens: int = 0          # bucket-padding waste
     slot_steps_active: int = 0             # Σ over decode steps of active slots
+    decode_rows: int = 0                   # Σ over decode steps of rows launched
     prefill_shapes: Set[Tuple[int, int]] = dataclasses.field(
         default_factory=set)
+    decode_shapes: Set[int] = dataclasses.field(default_factory=set)
 
     @property
     def tokens_per_decode_step(self) -> float:
@@ -303,10 +379,24 @@ class EngineStats:
             return 0.0
         return self.slot_steps_active / self.decode_steps
 
+    @property
+    def decode_rows_per_token(self) -> float:
+        """Mean FFT → ∘ → IFFT rows launched per generated token — the
+        decode-side work amplification. Full-slot decode pays ``batch`` rows
+        per step regardless of occupancy; slot compaction pays the bucket
+        that holds the active set, so tail-heavy workloads pull this toward
+        1.0. (Prefill-produced first tokens cost no decode rows, so a
+        perfectly compacted engine can sit slightly below 1.)"""
+        if self.tokens_generated == 0:
+            return 0.0
+        return self.decode_rows / self.tokens_generated
+
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
         d["prefill_shapes"] = sorted(self.prefill_shapes)
+        d["decode_shapes"] = sorted(self.decode_shapes)
         d["tokens_per_decode_step"] = self.tokens_per_decode_step
+        d["decode_rows_per_token"] = self.decode_rows_per_token
         return d
 
 
@@ -323,23 +413,33 @@ class ServeEngine:
       waiting for its slowest member;
     * prefill launches are rounded to ``(batch_bucket, prompt_bucket)``
       shapes so the engine compiles at most ``max_prefill_variants``
-      prefill executables — decode always runs at the full slot count
-      (exactly one executable);
+      prefill executables;
+    * decode launches compact the active slots into the smallest
+      ``decode_buckets`` batch that holds them (gather rows → decode →
+      scatter rows back), so the engine compiles at most
+      ``len(decode_buckets)`` decode executables and the tail of a batch
+      never pays full-slot row work;
     * frozen frequency weights are computed exactly once at construction
       (``freeze_params``) and shared by every bucketed executable — the
       paper's BRAM-resident FFT(w), with the jitted steps containing no
       ``rfft(w)``.
 
-    ``generate`` keeps the original API: a list of :class:`Request` in,
-    per-request token lists out (request order preserved). Greedy outputs
-    are bit-identical to the B=1 one-request-at-a-time loop and to
-    :class:`WaveEngine` — bucket padding is attention-masked, never part of
-    the math.
+    Streaming API: ``submit(request) -> req_id`` enqueues, ``step()``
+    advances admission plus one decode round, ``poll(req_id)`` snapshots
+    progress (:class:`RequestState`) without consuming it, and
+    ``drain(req_ids=None)`` runs to idle and claims finished outputs.
+    ``generate`` is a thin wrapper (submit all → drain → reorder): a list
+    of :class:`Request` in, per-request token lists out in request order.
+    Greedy outputs are bit-identical to the B=1 one-request-at-a-time loop,
+    to :class:`WaveEngine`, and across ``decode_buckets`` choices — bucket
+    padding is attention-masked and slot compaction is a pure permutation,
+    never part of the math.
     """
 
     def __init__(self, model, cfg: ModelConfig, params, batch: int,
                  cache_len: int, *,
                  prompt_buckets: Optional[Sequence[int]] = None,
+                 decode_buckets: Optional[Sequence[int]] = None,
                  policy: str = "fifo"):
         if cfg.family == "encdec":
             raise ValueError(
@@ -358,32 +458,42 @@ class ServeEngine:
         if prompt_buckets is None:
             prompt_buckets = pow2_buckets(min(8, self.cache_len),
                                           self.cache_len)
-        pb = tuple(sorted(set(int(b) for b in prompt_buckets)))
-        if not pb or pb[0] < 1 or pb[-1] > self.cache_len:
-            raise ValueError(
-                f"prompt_buckets must lie in [1, cache_len={self.cache_len}];"
-                f" got {pb}"
-            )
-        if pb[-1] != self.cache_len:
-            pb = pb + (self.cache_len,)     # every admissible prompt fits
-        self.prompt_buckets = pb
+        # every admissible prompt must fit -> cache_len always terminates
+        self.prompt_buckets = validate_buckets(
+            "prompt_buckets", prompt_buckets, self.cache_len)
         self.batch_buckets = pow2_buckets(1, self.batch)
+        if decode_buckets is None:
+            decode_buckets = self.batch_buckets
+        # any active-slot count must map to a bucket -> batch terminates
+        self.decode_buckets = validate_buckets(
+            "decode_buckets", decode_buckets, self.batch)
         self.stats = EngineStats()
         self._repeat_axes = tuple(
             1 if g.repeat > 1 else 0 for g in cfg.layer_groups()
         )
         # raw (unjitted) fns kept for jaxpr introspection in tests
         self._prefill_fn = self._prefill_and_place
-        self._decode_fn = make_decode_step(model, cfg)
+        self._decode_fn = self._decode_and_place
         self._prefill = jax.jit(self._prefill_fn)
         self._decode = jax.jit(self._decode_fn)
-        self._reset()
+        # streaming state: queued/running outputs, claimed-on-drain results
+        self._sched = Scheduler(self.policy)
+        self._next_rid = 0
+        self._req: Dict[int, Request] = {}
+        self._out: Dict[int, List[int]] = {}
+        self._finished: Dict[int, List[int]] = {}
+        self._reset_slots()
 
     # -- compile accounting -------------------------------------------------
     @property
     def max_prefill_variants(self) -> int:
         """Upper bound on distinct prefill executables over the lifetime."""
         return len(self.batch_buckets) * len(self.prompt_buckets)
+
+    @property
+    def max_decode_variants(self) -> int:
+        """Upper bound on distinct decode executables over the lifetime."""
+        return len(self.decode_buckets)
 
     @property
     def prefill_compiles(self) -> int:
@@ -405,6 +515,26 @@ class ServeEngine:
         )
         return logits[:, -1], self._place_cache(cache, filled, slot_idx)
 
+    def _decode_and_place(self, params, tokens, cache, pos, slot_idx):
+        """Gather the slot rows named by ``slot_idx`` into a bucket-shaped
+        sub-batch, decode one token there, then scatter the updated rows
+        back into the persistent slot cache. ``tokens (Bb, 1)``, ``pos
+        (Bb,)``, ``slot_idx (Bb,)`` — a pure permutation of rows, so the
+        per-slot math is identical to full-slot decode."""
+        sub = self._gather_cache(cache, slot_idx)
+        logits, new_sub = self.model.decode_step(params, tokens, sub, pos)
+        return logits, self._place_cache(cache, new_sub, slot_idx)
+
+    def _gather_cache(self, src, idx):
+        """Gather slot rows into a sub-batch cache (inverse of
+        ``_place_cache``); batch axis 0 plain, 1 repeat-stacked."""
+        out = []
+        for axis, s_g in zip(self._repeat_axes, src):
+            def take(s, axis=axis):
+                return s[idx] if axis == 0 else s[:, idx]
+            out.append(jax.tree.map(take, s_g))
+        return out
+
     def _place_cache(self, dst, src, idx):
         """Scatter per-request cache rows into slot rows. The batch axis is
         0 for plain groups and 1 for repeat-stacked groups (leading scan
@@ -419,7 +549,7 @@ class ServeEngine:
         return out
 
     # -- host-side slot state ----------------------------------------------
-    def _reset(self):
+    def _reset_slots(self):
         B = self.batch
         self.cache = self.model.init_cache(B, self.cache_len)
         self._active = np.zeros(B, bool)
@@ -433,20 +563,22 @@ class ServeEngine:
         _validate_request(r, self.cache_len)
 
     def _finish(self, slot: int) -> None:
+        rid = self._slot_req[slot]
+        self._finished[rid] = self._out.pop(rid)
+        self._req.pop(rid, None)
         self._active[slot] = False
         self._slot_req[slot] = None
         self._slot_rng[slot] = None
         self.stats.requests_completed += 1
 
-    def _push_token(self, slot: int, logits_row: np.ndarray, outs, requests
-                    ) -> None:
+    def _push_token(self, slot: int, logits_row: np.ndarray) -> None:
         rid = self._slot_req[slot]
-        r = requests[rid]
+        r = self._req[rid]
         tok = _sample_token(logits_row, r.sampling, self._slot_rng[slot])
         if r.stop_tokens and tok in r.stop_tokens:
             self._finish(slot)
             return
-        outs[rid].append(tok)
+        self._out[rid].append(tok)
         self.stats.tokens_generated += 1
         self._slot_last[slot] = tok
         self._slot_left[slot] -= 1
@@ -454,14 +586,14 @@ class ServeEngine:
             self._finish(slot)
 
     # -- admission ----------------------------------------------------------
-    def _admit(self, sched: Scheduler, outs, requests) -> None:
+    def _admit(self) -> None:
         free = [i for i in range(self.batch) if not self._active[i]]
-        n = min(len(free), len(sched))
+        n = min(len(free), len(self._sched))
         if n == 0:
             return
         by_bucket: Dict[int, List[int]] = {}
-        for rid in sched.take(n):
-            Sb = pick_bucket(requests[rid].prompt_len, self.prompt_buckets)
+        for rid in self._sched.take(n):
+            Sb = pick_bucket(self._req[rid].prompt_len, self.prompt_buckets)
             by_bucket.setdefault(Sb, []).append(rid)
         for Sb in sorted(by_bucket):
             rids = by_bucket[Sb]
@@ -471,7 +603,7 @@ class ServeEngine:
                 toks = np.zeros((Bb, Sb), np.int32)
                 pos = np.zeros((Bb, Sb), np.int32)
                 for j, rid in enumerate(chunk):
-                    p = np.asarray(requests[rid].prompt,
+                    p = np.asarray(self._req[rid].prompt,
                                    np.int32).reshape(-1)
                     L = p.shape[0]
                     toks[j, Sb - L:] = p
@@ -486,36 +618,50 @@ class ServeEngine:
                 self.stats.prefill_shapes.add((Bb, Sb))
                 lg = np.asarray(logits)
                 for j, (slot, rid) in enumerate(zip(slots, chunk)):
-                    r = requests[rid]
+                    r = self._req[rid]
                     self._slot_req[slot] = rid
                     self._slot_rng[slot] = r.sampling.make_rng()
                     self._slot_pos[slot] = r.prompt_len
                     self._slot_left[slot] = r.max_new
                     self._active[slot] = True
-                    self._push_token(slot, lg[j], outs, requests)
+                    self._push_token(slot, lg[j])
 
     # -- decode -------------------------------------------------------------
-    def _decode_step(self, outs, requests) -> None:
-        act = self._active.copy()
-        if not act.any():
+    def _decode_step(self) -> None:
+        act = np.nonzero(self._active)[0]
+        n = act.size
+        if n == 0:
             return
+        Bb = pick_bucket(n, self.decode_buckets)
+        # pad lanes borrow *distinct free* slot rows (there are always
+        # enough: Bb <= batch so Bb - n <= batch - n). The scatter-back
+        # therefore has no duplicate indices, and pad-lane writes land on
+        # dead rows that the next admission's prefill fully overwrites.
+        idx = act
+        if Bb > n:
+            free = np.nonzero(~self._active)[0]
+            idx = np.concatenate([act, free[: Bb - n]])
+        idx = idx.astype(np.int32)
         logits, self.cache = self._decode(
-            self.params, jnp.asarray(self._slot_last[:, None]), self.cache,
-            jnp.asarray(self._slot_pos),
+            self.params, jnp.asarray(self._slot_last[idx][:, None]),
+            self.cache, jnp.asarray(self._slot_pos[idx]), jnp.asarray(idx),
         )
         self.stats.decode_steps += 1
-        self.stats.slot_steps_active += int(act.sum())
+        self.stats.slot_steps_active += int(n)
+        self.stats.decode_rows += int(Bb)
+        self.stats.decode_shapes.add(int(Bb))
         self._slot_pos[act] += 1
         lg = np.asarray(logits)
-        for slot in np.nonzero(act)[0]:
-            self._push_token(int(slot), lg[slot], outs, requests)
+        for j, slot in enumerate(act):
+            self._push_token(int(slot), lg[j])
 
     def prewarm(self) -> int:
         """Compile every (batch-bucket, prompt-bucket) prefill executable
-        plus the decode executable up front, so steady-state serving never
-        recompiles. Possible precisely because the bucket grid is finite —
-        the wave baseline has no analogue (one executable per distinct wave
-        length it happens to see). Returns the number of live executables.
+        plus every decode-bucket executable up front, so steady-state
+        serving never recompiles. Possible precisely because the bucket
+        grid is finite — the wave baseline has no analogue (one executable
+        per distinct wave length it happens to see). Returns the number of
+        live executables.
         """
         for Sb in self.prompt_buckets:
             for Bb in self.batch_buckets:
@@ -526,29 +672,85 @@ class ServeEngine:
                                         (Bb, Sb)) - Sb)
                 slots = jnp.arange(Bb, dtype=jnp.int32)
                 self._prefill(self.params, toks, pos, self.cache, slots)
-        self._decode(
-            self.params, jnp.zeros((self.batch, 1), jnp.int32), self.cache,
-            jnp.zeros((self.batch,), jnp.int32),
-        )
+        for Bb in self.decode_buckets:
+            # results are discarded (jit is functional): slot state and
+            # self.cache are untouched, only the executable cache warms
+            self._decode(
+                self.params, jnp.zeros((Bb, 1), jnp.int32), self.cache,
+                jnp.zeros((Bb,), jnp.int32),
+                jnp.arange(Bb, dtype=jnp.int32),
+            )
         return self.prefill_compiles + self.decode_compiles
 
     # -- public API ---------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        """Enqueue one request for service; returns its request id. The
+        request is admitted to a cache slot by a later ``step()`` (or
+        ``drain``/``generate``) as slots free up."""
+        self._validate(request)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._req[rid] = request
+        self._out[rid] = []
+        self._sched.submit(rid, request.prompt_len)
+        return rid
+
+    def step(self) -> bool:
+        """Advance the engine one round: admit queued requests into free
+        slots (bucketed prefill) and run one compacted decode step. Returns
+        True while work remains (active slots or queued requests)."""
+        self._admit()
+        self._decode_step()
+        return bool(self._active.any() or len(self._sched))
+
+    def poll(self, req_id: int) -> RequestState:
+        """Snapshot a submitted request's progress without consuming it:
+        tokens generated so far and whether it finished. Raises ``KeyError``
+        for unknown or already-claimed (drained) request ids."""
+        if req_id in self._finished:
+            return RequestState(req_id, True, tuple(self._finished[req_id]))
+        if req_id in self._out:
+            return RequestState(req_id, False, tuple(self._out[req_id]))
+        raise KeyError(
+            f"unknown or already-claimed request id {req_id}"
+        )
+
+    def drain(self, req_ids: Optional[Sequence[int]] = None
+              ) -> Dict[int, List[int]]:
+        """Run ``step()`` until the engine is idle, then claim finished
+        outputs: the requested ids (default: every unclaimed finished
+        request) are removed from the engine and returned as
+        ``{req_id: tokens}``. Unlisted finished requests stay pollable."""
+        while self.step():
+            pass
+        if req_ids is None:
+            req_ids = list(self._finished)
+        # validate every id (and reject duplicates) BEFORE popping any, so a
+        # bad id cannot discard other requests' already-claimed outputs
+        rids = list(req_ids)
+        if len(set(rids)) != len(rids):
+            raise KeyError(f"duplicate request ids in drain: {rids}")
+        for rid in rids:
+            if rid not in self._finished:
+                raise KeyError(
+                    f"request id {rid} is not a finished unclaimed request"
+                )
+        return {rid: self._finished.pop(rid) for rid in rids}
+
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Serve a list of requests; returns per-request tokens, in request
-        order. Admission interleaves with decoding: slots refill as soon as
-        their request finishes (continuous batching)."""
-        reqs = list(requests)
-        for r in reqs:
+        order. A thin wrapper over the streaming loop: submit all, drain to
+        idle, claim this call's outputs (earlier ``submit``-ed requests also
+        run to completion but stay pollable/claimable). Admission
+        interleaves with decoding: slots refill as soon as their request
+        finishes (continuous batching)."""
+        # validate the whole batch before submitting any of it: a bad
+        # request must not leave its predecessors enqueued as ghost work
+        for r in requests:
             self._validate(r)
-        sched = Scheduler(self.policy)
-        for rid, r in enumerate(reqs):
-            sched.submit(rid, r.prompt_len)
-        outs: List[List[int]] = [[] for _ in reqs]
-        self._reset()
-        while len(sched) or self._active.any():
-            self._admit(sched, outs, reqs)
-            self._decode_step(outs, reqs)
-        return outs
+        rids = [self.submit(r) for r in requests]
+        done = self.drain(rids)
+        return [done[rid] for rid in rids]
 
 
 # ---------------------------------------------------------------------------
@@ -639,6 +841,8 @@ class WaveEngine:
             self.stats.decode_steps += 1
             self.stats.slot_steps_active += sum(
                 1 for r in wave if t + 1 < r.max_new)
+            self.stats.decode_rows += B
+            self.stats.decode_shapes.add(B)
             cur = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
             for j, r in enumerate(wave):
                 if t + 1 < r.max_new:

@@ -10,10 +10,11 @@ import pytest
 from repro.configs.base import ModelConfig, SWMConfig
 from repro.models.decoder import HybridDecoderLM
 from repro.nn.module import init_params
-from repro.serve.engine import (Request, SamplingParams, Scheduler,
-                                ServeEngine, WaveEngine, _sample_token,
-                                batch_split, make_decode_step,
-                                make_prefill_step, pick_bucket, pow2_buckets)
+from repro.serve.engine import (Request, RequestState, SamplingParams,
+                                Scheduler, ServeEngine, WaveEngine,
+                                _sample_token, batch_split, make_decode_step,
+                                make_prefill_step, pick_bucket, pow2_buckets,
+                                validate_buckets)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -147,6 +148,139 @@ def test_wave_and_continuous_identical_greedy(lm):
 
 
 # ---------------------------------------------------------------------------
+# Decode-side bucketing: equivalence, row-work accounting, compile budget
+# ---------------------------------------------------------------------------
+
+
+def test_decode_bucket_equivalence_and_row_work(lm):
+    """Slot compaction is a pure permutation: greedy outputs bit-identical
+    across decode_buckets settings (full-slot = PR-2 behavior, pow2 default,
+    all-singleton), while bucketed row-work strictly drops on a tail-heavy
+    mix (one long request outlives the rest)."""
+    cfg, model, params = lm
+    reqs = _mix(10, 6, plen_hi=9, new_hi=4)
+    reqs.append(Request(np.arange(5, dtype=np.int32), max_new=14))  # tail
+    full = ServeEngine(model, cfg, params, batch=4, cache_len=32,
+                       decode_buckets=(4,))
+    bkt = ServeEngine(model, cfg, params, batch=4, cache_len=32)
+    ones = ServeEngine(model, cfg, params, batch=4, cache_len=32,
+                       decode_buckets=(1, 2, 3, 4))
+    outs = full.generate(reqs)
+    assert bkt.generate(reqs) == outs
+    assert ones.generate(reqs) == outs
+    assert outs == _reference_loop(model, cfg, full.params, reqs, 32)
+    # same tokens, strictly less decode row-work once the batch tails off
+    assert full.stats.tokens_generated == bkt.stats.tokens_generated
+    assert bkt.stats.decode_rows < full.stats.decode_rows
+    assert (bkt.stats.decode_rows_per_token
+            < full.stats.decode_rows_per_token)
+    assert set(full.stats.decode_shapes) == {4}
+    assert min(bkt.stats.decode_shapes) < 4
+
+
+def test_decode_compile_budget_bounded_by_buckets(lm):
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=4, cache_len=32,
+                      prompt_buckets=(8, 16))
+    eng.prewarm()
+    assert eng.decode_compiles == len(eng.decode_buckets)
+    assert eng.decode_compiles <= len(eng.batch_buckets)
+    eng.generate(_mix(11, 9))
+    eng.generate(_mix(12, 3))
+    assert eng.decode_compiles == len(eng.decode_buckets)
+
+
+# ---------------------------------------------------------------------------
+# Streaming submit / step / poll / drain
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_submit_poll_matches_generate(lm):
+    """The streaming loop and the closed generate() call produce identical
+    tokens — generate IS the streaming loop (submit all, drain, reorder)."""
+    cfg, model, params = lm
+    reqs = _mix(13, 6, new_hi=8)
+    want = ServeEngine(model, cfg, params, batch=2,
+                       cache_len=32).generate(reqs)
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    rids = [eng.submit(r) for r in reqs]
+    while eng.step():
+        pass
+    views = [eng.poll(rid) for rid in rids]
+    assert all(v.done for v in views)
+    assert [list(v.tokens) for v in views] == want
+    done = eng.drain(rids)
+    assert [done[rid] for rid in rids] == want
+
+
+def test_streaming_incremental_poll_and_claim(lm):
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    rid = eng.submit(Request(np.arange(4, dtype=np.int32), max_new=6))
+    v0 = eng.poll(rid)
+    assert isinstance(v0, RequestState)
+    assert v0 == RequestState(rid, False, ())          # queued, no tokens yet
+    seen = [len(v0.tokens)]
+    while eng.step():
+        seen.append(len(eng.poll(rid).tokens))
+    assert eng.poll(rid).done
+    assert seen == sorted(seen) and len(eng.poll(rid).tokens) == 6
+    # late submits keep the stream open and ids monotone
+    rid2 = eng.submit(Request(np.arange(3, dtype=np.int32), max_new=2))
+    assert rid2 > rid
+    out = eng.drain()
+    assert set(out) == {rid, rid2}
+    assert len(out[rid]) == 6 and len(out[rid2]) == 2
+    with pytest.raises(KeyError, match="already-claimed"):
+        eng.poll(rid)
+    with pytest.raises(KeyError, match="not a finished"):
+        eng.drain([rid])
+
+
+def test_drain_with_bad_id_claims_nothing(lm):
+    """drain must validate every requested id before popping any: a bad id
+    mid-list cannot silently discard other requests' outputs."""
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    rid = eng.submit(Request(np.arange(3, dtype=np.int32), max_new=2))
+    while eng.step():
+        pass
+    with pytest.raises(KeyError, match="not a finished"):
+        eng.drain([rid, 999])
+    with pytest.raises(KeyError, match="duplicate"):
+        eng.drain([rid, rid])
+    # rid's output survived both failed drains and is still claimable
+    assert len(eng.drain([rid])[rid]) == 2
+
+
+def test_generate_with_invalid_request_enqueues_nothing(lm):
+    """generate validates the whole batch before submitting any of it: a
+    bad request must not leave its predecessors as ghost work that burns
+    slots in the caller's next call."""
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    good = Request(np.arange(3, dtype=np.int32), max_new=2)
+    bad = Request(np.arange(40, dtype=np.int32), max_new=2)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        eng.generate([good, bad])
+    assert not eng.step()                   # nothing queued, nothing active
+    assert eng.stats.tokens_generated == 0
+
+
+def test_generate_claims_only_its_own_requests(lm):
+    """generate() drains the whole engine but only claims its own ids —
+    an earlier streaming submit stays pollable afterwards."""
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    early = eng.submit(Request(np.arange(4, dtype=np.int32), max_new=3))
+    outs = eng.generate(_mix(14, 3))
+    assert len(outs) == 3
+    v = eng.poll(early)
+    assert v.done and len(v.tokens) == 3
+    assert eng.drain([early]) == {early: list(v.tokens)}
+
+
+# ---------------------------------------------------------------------------
 # Compile budget + freeze-once regression (the plan-cache invariants)
 # ---------------------------------------------------------------------------
 
@@ -173,22 +307,25 @@ def test_compile_budget_and_zero_rfft_after_freeze():
     # zero rfft(w) across the entire serving lifetime after freeze
     assert ops.freq_weights_trace_count() - n0 == n_frozen
 
-    # at most len(buckets) executables, decode exactly one
+    # at most len(buckets) executables for prefill AND decode
     assert eng.prefill_compiles <= eng.max_prefill_variants
     assert eng.prefill_compiles == len(eng.stats.prefill_shapes)
-    assert eng.decode_compiles == 1
+    assert eng.decode_compiles <= eng.max_decode_variants
+    assert eng.decode_compiles == len(eng.stats.decode_shapes)
 
-    # jaxpr check: no fft primitive in either traced step
+    # jaxpr check: no fft primitive in the prefill step or in the
+    # gather->decode->scatter step at ANY decode bucket shape
     toks = jnp.zeros((1, 4), jnp.int32)
     pos = jnp.zeros((1, 4), jnp.int32)
     slots = jnp.zeros((1,), jnp.int32)
     jp = jax.make_jaxpr(eng._prefill_fn)(
         eng.params, toks, pos, eng.cache, slots)
     assert "fft" not in str(jp)
-    jd = jax.make_jaxpr(eng._decode_fn)(
-        eng.params, jnp.zeros((2, 1), jnp.int32), eng.cache,
-        jnp.zeros((2,), jnp.int32))
-    assert "fft" not in str(jd)
+    for Bb in eng.decode_buckets:
+        jd = jax.make_jaxpr(eng._decode_fn)(
+            eng.params, jnp.zeros((Bb, 1), jnp.int32), eng.cache,
+            jnp.zeros((Bb,), jnp.int32), jnp.arange(Bb, dtype=jnp.int32))
+        assert "fft" not in str(jd)
 
 
 def test_prewarm_compiles_every_bucket_then_serves_compile_free(lm):
@@ -197,10 +334,11 @@ def test_prewarm_compiles_every_bucket_then_serves_compile_free(lm):
                       prompt_buckets=(8, 16))
     eng.prewarm()
     assert eng.prefill_compiles == eng.max_prefill_variants
-    assert eng.decode_compiles == 1
+    assert eng.decode_compiles == eng.max_decode_variants
+    assert eng.max_decode_variants <= len(eng.batch_buckets)
     eng.generate(_mix(8, 5))
     assert eng.prefill_compiles == eng.max_prefill_variants
-    assert eng.decode_compiles == 1
+    assert eng.decode_compiles == eng.max_decode_variants
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +441,99 @@ def test_bucket_helpers():
     # any m <= slot count decomposes exactly
     for m in range(1, 17):
         assert sum(batch_split(m, (1, 2, 4, 8))) == m
+
+
+def test_batch_split_without_unit_bucket_raises():
+    """A bucket list that cannot cover the remainder must raise a ValueError
+    naming the buckets — not leak a bare StopIteration from next()."""
+    with pytest.raises(ValueError, match=r"\[2, 4\].*include 1"):
+        batch_split(3, (2, 4))
+    with pytest.raises(ValueError, match="cannot decompose 5"):
+        batch_split(5, (4,))
+
+
+def test_validate_buckets_and_engine_construction(lm):
+    assert validate_buckets("b", (4, 1, 2, 2), 4) == (1, 2, 4)
+    assert validate_buckets("b", (2,), 4) == (2, 4)      # hi appended
+    with pytest.raises(ValueError, match="decode_buckets"):
+        validate_buckets("decode_buckets", (0, 2), 4)
+    with pytest.raises(ValueError, match="decode_buckets"):
+        validate_buckets("decode_buckets", (8,), 4)
+    with pytest.raises(ValueError, match="decode_buckets"):
+        validate_buckets("decode_buckets", (), 4)
+    # engine construction validates user-supplied buckets the same way
+    cfg, model, params = lm
+    with pytest.raises(ValueError, match="decode_buckets"):
+        ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                    decode_buckets=(3,))
+    with pytest.raises(ValueError, match="prompt_buckets"):
+        ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                    prompt_buckets=(0, 8))
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                      decode_buckets=(1,))
+    assert eng.decode_buckets == (1, 2)                  # batch appended
+
+
+def test_top_k_ties_keep_exactly_k():
+    """Regression: `z >= kth` kept every candidate tied at the k-th value.
+    Ties now break deterministically toward the lower token id, so exactly
+    top_k survive."""
+    logits = np.zeros(8, np.float32)
+    logits[[2, 4, 6]] = 1.0                # three-way tie at the top
+    sp = SamplingParams(temperature=1.0, top_k=2, seed=0)
+    draws = {_sample_token(logits, sp, np.random.default_rng(s))
+             for s in range(200)}
+    # survivors are the two LOWEST tied ids; 6 (and everything cold) is out
+    assert draws == {2, 4}
+    # k-th value tied with below-threshold entries: still exactly k
+    tied = np.array([3.0, 2.0, 2.0, 2.0, 0.0], np.float32)
+    sp1 = SamplingParams(temperature=1.0, top_k=2)
+    draws = {_sample_token(tied, sp1, np.random.default_rng(s))
+             for s in range(200)}
+    assert draws == {0, 1}
+
+
+def test_top_k_at_least_vocab_means_full_vocab():
+    """top_k >= vocab is explicitly full-vocab sampling: identical draws to
+    top_k=0 under the same rng stream."""
+    rng = np.random.default_rng(5)
+    logits = rng.normal(size=16).astype(np.float32)
+    for k in (16, 17, 1000):
+        sp_k = SamplingParams(temperature=0.9, top_k=k)
+        sp_0 = SamplingParams(temperature=0.9, top_k=0)
+        a = [_sample_token(logits, sp_k, np.random.default_rng(s))
+             for s in range(50)]
+        b = [_sample_token(logits, sp_0, np.random.default_rng(s))
+             for s in range(50)]
+        assert a == b
+
+
+def test_request_defaults_and_stop_token_normalization():
+    """Each Request gets its own SamplingParams (default_factory, no shared
+    mutable-ish default), and stop_tokens normalizes to a tuple."""
+    a, b = Request(np.arange(3, dtype=np.int32)), \
+        Request(np.arange(3, dtype=np.int32))
+    assert a.sampling == SamplingParams() and a.sampling is not b.sampling
+    r = Request(np.arange(3, dtype=np.int32), stop_tokens=[7, 9])
+    assert r.stop_tokens == (7, 9) and isinstance(r.stop_tokens, tuple)
+    # list- and array-valued stop_tokens hash/compare like the tuple form
+    assert Request(np.arange(2, dtype=np.int32),
+                   stop_tokens=np.array([1, 2])).stop_tokens == (1, 2)
+    assert all(isinstance(t, int) for t in r.stop_tokens)
+
+
+def test_list_stop_tokens_served_like_tuple(lm, engine):
+    cfg, model, _ = lm
+    base = Request(np.arange(4, dtype=np.int32), max_new=6)
+    plain = engine.generate([base])[0]
+    assert len(plain) > 1
+    stop = plain[len(plain) // 2]
+    with_list = Request(np.arange(4, dtype=np.int32), max_new=6,
+                        stop_tokens=[stop])
+    with_tuple = Request(np.arange(4, dtype=np.int32), max_new=6,
+                         stop_tokens=(stop,))
+    assert (engine.generate([with_list])
+            == engine.generate([with_tuple]))
 
 
 def test_stats_accounting(lm):
