@@ -18,17 +18,26 @@ configurations — bucketed (default pow2 ``decode_buckets``) and full-slot
     (unbounded in the workload), the continuous engine is bounded by its
     bucket grids on both the prefill and decode paths.
 
-Two workloads: ``mixed`` (mixed prompt lengths and budgets — where wave
-batching stalls) and ``tail`` (tail-heavy: a few long-budget requests
+Three workloads: ``mixed`` (mixed prompt lengths and budgets — where wave
+batching stalls), ``tail`` (tail-heavy: a few long-budget requests
 outlive many short ones, so the batch drains to 1-2 live slots — where
-full-slot decode burns dead rows). Greedy outputs of every engine are
-asserted identical before timing is reported (same frozen-FFT(w) math,
-different orchestration); on the tail workload the bucketed engine must
-show strictly lower decode row-work per token than full-slot decode.
+full-slot decode burns dead rows), and ``prefix`` (many requests sharing
+long prompt heads — the multi-turn / few-shot shape — where shared-prefix
+KV reuse stops re-running prefill over heads other requests already
+computed: the bench compares the continuous engine with the prefix cache
+off vs on and reports ``prefill_tokens_saved`` / ``prefix_hit_rate`` /
+prefill tokens per request / tokens-per-sec, asserting the saved-token
+count is strictly positive and greedy outputs are bit-identical).
+Greedy outputs of every engine are asserted identical before timing is
+reported (same frozen-FFT(w) math, different orchestration); on the tail
+workload the bucketed engine must show strictly lower decode row-work per
+token than full-slot decode.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --json out.json
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --workload tail \
         --json out_tail.json
+    PYTHONPATH=src python benchmarks/serve_bench.py --quick \
+        --workload prefix --json out_prefix.json
 """
 
 from __future__ import annotations
@@ -94,7 +103,28 @@ def _workload_tail(n_requests: int, cache_len: int, seed: int):
     return reqs
 
 
-WORKLOADS = {"mixed": _workload_mixed, "tail": _workload_tail}
+def _workload_prefix(n_requests: int, cache_len: int, seed: int):
+    """Shared-head traffic: every request is one of 3 long common heads
+    (half the cache) plus a short private tail — the multi-turn / few-shot
+    serving shape where the same prompt head is prefilled over and over
+    unless resident rows are reused."""
+    rng = np.random.default_rng(seed)
+    head_len = cache_len // 2
+    heads = [rng.integers(0, 128, size=head_len).astype(np.int32)
+             for _ in range(3)]
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, 128,
+                            size=int(rng.integers(1, 4))).astype(np.int32)
+        prompt = np.concatenate([heads[i % len(heads)], tail])
+        cap = cache_len - prompt.shape[0] + 1
+        max_new = int(rng.integers(2, max(3, min(7, cap))))
+        reqs.append(Request(prompt, max_new=max_new))
+    return reqs
+
+
+WORKLOADS = {"mixed": _workload_mixed, "tail": _workload_tail,
+             "prefix": _workload_prefix}
 
 
 def _run(engine, warmup, reqs):
@@ -106,6 +136,8 @@ def _run(engine, warmup, reqs):
     c0, s0 = engine.prefill_compiles, engine.stats.decode_steps
     a0, p0 = engine.stats.slot_steps_active, engine.stats.prefill_calls
     r0, t0 = engine.stats.decode_rows, engine.stats.tokens_generated
+    h0, v0 = engine.stats.prefix_hits, engine.stats.prefill_tokens_saved
+    l0 = engine.stats.prefix_lookups
     t_start = time.perf_counter()
     outs = engine.generate(reqs)
     dt = time.perf_counter() - t_start
@@ -114,6 +146,7 @@ def _run(engine, warmup, reqs):
     active = engine.stats.slot_steps_active - a0
     decode_rows = engine.stats.decode_rows - r0
     gen_tokens = engine.stats.tokens_generated - t0
+    lookups = engine.stats.prefix_lookups - l0
     return outs, {
         "tokens": tokens,
         "seconds": dt,
@@ -128,7 +161,84 @@ def _run(engine, warmup, reqs):
         "prefill_compiles": engine.prefill_compiles,
         "decode_compiles": engine.decode_compiles,
         "prefill_shapes": sorted(engine.stats.prefill_shapes),
+        "prefix_hits": engine.stats.prefix_hits - h0,
+        "prefix_lookups": lookups,
+        "prefix_hit_rate": (engine.stats.prefix_hits - h0)
+        / max(lookups, 1),
+        "prefill_tokens_saved": engine.stats.prefill_tokens_saved - v0,
     }
+
+
+def _run_prefix(model, cfg, params, reqs, warmup, n_requests, batch,
+                cache_len, seed, json_path):
+    """Prefix workload: continuous engine with the prefix cache OFF vs ON.
+    Outputs must stay bit-identical; the cache-on engine must prefill
+    strictly fewer prompt tokens per request (prefill_tokens_saved > 0)."""
+    off = ServeEngine(model, cfg, params, batch=batch, cache_len=cache_len)
+    off.prewarm()
+    outs_off, row_off = _run(off, warmup, reqs)
+    on = ServeEngine(model, cfg, params, batch=batch, cache_len=cache_len,
+                     prefix_cache=True)
+    on.prewarm()
+    outs_on, row_on = _run(on, warmup, reqs)
+
+    assert outs_on == outs_off, (
+        "greedy outputs diverged with the prefix cache on: shared-head "
+        "reuse must be bit-identical to full prefill"
+    )
+    assert row_on["prefill_tokens_saved"] > 0, (
+        "prefix workload produced zero reused prefix tokens"
+    )
+    prompt_tokens = sum(r.prompt_len for r in reqs)
+    for row in (row_off, row_on):
+        row["prompt_tokens"] = prompt_tokens
+        row["prefill_tokens"] = prompt_tokens - row["prefill_tokens_saved"]
+        row["prefill_tokens_per_request"] = (
+            row["prefill_tokens"] / n_requests)
+    assert (row_on["prefill_tokens_per_request"]
+            < row_off["prefill_tokens_per_request"]), (
+        "prefill tokens/request must drop strictly with the prefix cache on"
+    )
+
+    report = {
+        "workload": {"name": "prefix", "n_requests": n_requests,
+                     "batch": batch, "cache_len": cache_len, "seed": seed,
+                     "total_tokens": row_on["tokens"],
+                     "prompt_tokens": prompt_tokens,
+                     "host": "cpu-interpret"},
+        "prefix_off": row_off,
+        "prefix_on": row_on,
+        "equal_greedy_outputs": True,
+        "prefill_tokens_saved": row_on["prefill_tokens_saved"],
+        "prefix_hit_rate": row_on["prefix_hit_rate"],
+        "speedup_tokens_per_sec":
+            row_on["tokens_per_sec"] / max(row_off["tokens_per_sec"], 1e-9),
+        "prefill_token_drop":
+            row_off["prefill_tokens_per_request"]
+            / max(row_on["prefill_tokens_per_request"], 1e-9),
+    }
+    for name, row in (("prefix_off", row_off), ("prefix_on", row_on)):
+        emit(f"serve/{name}_B{batch}_N{n_requests}_prefix",
+             row["seconds"] * 1e6,
+             f"tok_s={row['tokens_per_sec']:.1f};"
+             f"prefill_tokens_per_request="
+             f"{row['prefill_tokens_per_request']:.1f};"
+             f"prefix_hits={row['prefix_hits']};"
+             f"prefix_hit_rate={row['prefix_hit_rate']:.2f};"
+             f"prefill_tokens_saved={row['prefill_tokens_saved']};"
+             f"prefill_compiles={row['prefill_compiles']};"
+             f"decode_compiles={row['decode_compiles']};host=cpu")
+    emit("serve/speedup_prefix", 0.0,
+         f"tokens_per_sec={report['speedup_tokens_per_sec']:.2f}x;"
+         f"prefill_token_drop={report['prefill_token_drop']:.2f}x;"
+         f"prefix_hit_rate={report['prefix_hit_rate']:.2f};"
+         f"prefill_tokens_saved={report['prefill_tokens_saved']};"
+         f"equal_outputs=True")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+    return report
 
 
 def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
@@ -139,6 +249,9 @@ def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
     make = WORKLOADS[workload]
     reqs = make(n_requests, cache_len, seed)
     warmup = make(max(4, n_requests // 4), cache_len, seed + 1)
+    if workload == "prefix":
+        return _run_prefix(model, cfg, params, reqs, warmup, n_requests,
+                           batch, cache_len, seed, json_path)
 
     wave = WaveEngine(model, cfg, params, batch=batch, cache_len=cache_len)
     outs_w, row_w = _run(wave, warmup, reqs)
@@ -220,7 +333,9 @@ def main():
     ap.add_argument("--workload", choices=sorted(WORKLOADS),
                     default="mixed",
                     help="mixed: wave-stalling traffic; tail: tail-heavy "
-                         "traffic where decode compaction pays off")
+                         "traffic where decode compaction pays off; "
+                         "prefix: shared-prompt-head traffic where the "
+                         "prefix cache skips repeated head prefill")
     ap.add_argument("--n-requests", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)

@@ -1,9 +1,12 @@
 """Serving demo: train a tiny SWM LM briefly, then serve a mixed-length,
 mixed-budget request batch through the continuous-batching engine —
 per-slot admission, bucketed prefill shapes, compacted decode buckets,
-per-request sampling and stop tokens (prefill -> decode, frozen FFT(w)) —
-and finish with the streaming submit()/step()/poll()/drain() API serving
-an open-ended trickle of requests.
+per-request sampling and stop tokens (prefill -> decode, frozen FFT(w)),
+donated in-place cache buffers — then the streaming
+submit()/step()/poll()/drain() API serving an open-ended trickle, and
+finally shared-prefix KV reuse: requests sharing a long prompt head copy
+the resident rows from a donor slot instead of re-running prefill over
+the head (prefill_tokens_saved / prefix_hit_rate).
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -40,10 +43,13 @@ def main():
     # a request the moment a slot frees up, so the short-budget requests
     # below don't stall the long ones (and vice versa), and once the batch
     # tails off, decode gathers the survivors into a smaller bucket instead
-    # of stepping all 4 slot rows.
+    # of stepping all 4 slot rows. prefix_cache lets later requests that
+    # share a prompt head copy the resident donor rows (demo below); the
+    # cache buffers are donated (default), so decode scatters update the
+    # slot cache in place.
     engine = ServeEngine(model, cfg, state["params"], batch=4, cache_len=64,
                          prompt_buckets=(8, 16), decode_buckets=(1, 2, 4),
-                         policy="sjf")
+                         policy="sjf", prefix_cache=True)
     # prompts drawn from the training distribution: the model should
     # continue the +1..+6 drift pattern it learned
     prompts = [np.array([5, 9, 14, 18, 21], np.int32),
@@ -93,6 +99,26 @@ def main():
     done = engine.drain(rids)
     for rid in rids:
         print(f"  req {rid} finished: {done[rid]}")
+
+    # --- shared-prefix KV reuse -------------------------------------------
+    # many requests share one long prompt head (the multi-turn / few-shot
+    # serving shape): after the first request prefills the head, later ones
+    # copy the resident rows from its slot and prefill only their tails.
+    print("\nshared-prefix reuse:")
+    head = np.array([3, 9, 14, 20, 25, 31, 36, 42, 47, 53, 58, 64,
+                     69, 75, 80, 86], np.int32)          # 16-token head
+    tails = [np.array(t, np.int32) for t in
+             ([90, 94], [101, 105, 110], [7, 12], [115, 120, 125],
+              [50, 55], [33, 38, 44])]
+    h0, s0 = engine.stats.prefix_hits, engine.stats.prefill_tokens_saved
+    outs = engine.generate(
+        [Request(np.concatenate([head, t]), max_new=4) for t in tails])
+    for t, o in zip(tails, outs):
+        print(f"  head+{t.tolist()} -> {o}")
+    s = engine.stats
+    print(f"  prefix hits {s.prefix_hits - h0}/{len(tails)}; prefill "
+          f"tokens saved {s.prefill_tokens_saved - s0} "
+          f"(lifetime hit rate {s.prefix_hit_rate:.2f})")
 
 
 if __name__ == "__main__":

@@ -546,6 +546,9 @@ def block_circulant_apply_multi(
     biases=None,
     activation: str = "none",
     w_freqs=None,
+    w_freq_cat: Optional[Tuple[jax.Array, jax.Array]] = None,
+    splits: Optional[Tuple[int, ...]] = None,
+    bias_cat: Optional[jax.Array] = None,
     k: Optional[int] = None,
     karatsuba: bool = False,
 ):
@@ -556,14 +559,40 @@ def block_circulant_apply_multi(
     projection — C-LSTM's fused gate dataflow, applied to LSTM gates and
     attention QKV. Returns the per-projection outputs (split back). Pass
     ``k`` when ws is None and the block size is odd (K is ambiguous).
+
+    ``w_freq_cat=(wr, wi)`` takes a PRE-concatenated stacked frozen table
+    (``plan.freeze_params`` attaches one per fused group under
+    ``plan.FUSED_KEY``) with explicit per-projection ``splits`` (p_i block
+    counts) and ``k`` — the zero-concat serve path: no weight-side
+    ``jnp.concatenate`` appears in the trace. ``bias_cat`` is the matching
+    pre-concatenated (Σp_i·k,) bias (mutually exclusive with ``biases``).
     """
+    if w_freq_cat is not None:
+        if splits is None or k is None:
+            raise ValueError("w_freq_cat needs explicit splits and k")
+        if biases is not None:
+            raise ValueError("w_freq_cat takes bias_cat, not per-proj biases")
     if impl == "pallas":
         from repro.kernels.block_circulant import ops as bc_ops
 
         return bc_ops.block_circulant_matmul_multi(
             x, ws, biases=biases, activation=activation, w_freqs=w_freqs,
-            k=k,
+            w_freq_cat=w_freq_cat, splits=splits, bias_cat=bias_cat, k=k,
         )
+    if w_freq_cat is not None:
+        wr, wi = w_freq_cat
+        ps = list(splits)
+        lead = x.shape[:-1]
+        y = block_circulant_matvec_freq(
+            x.reshape(-1, x.shape[-1]), None,
+            w_freq=(wr + 1j * wi).astype(jnp.complex64), k=k,
+        ).reshape(*lead, -1)
+        if bias_cat is not None:
+            y = y + bias_cat.astype(y.dtype)
+        return [
+            _epilogue(o, None, activation)
+            for o in split_outputs(y, ps, k)
+        ]
     if w_freqs is not None:
         ps = [wr.shape[0] for wr, _ in w_freqs]
         if k is None:

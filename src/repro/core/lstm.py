@@ -69,8 +69,23 @@ class SWMLSTM:
     def _fused_gate_preacts(self, params, x_t, y_prev):
         """[x_t ; y_prev] through ONE stacked (4·dc, di+dp) circulant launch.
 
-        Returns the four gate pre-activations (bias fused, peepholes not)."""
+        Returns the four gate pre-activations (bias fused, peepholes not).
+        Frozen (serve) trees carry the whole 8-table group pre-concatenated
+        (``plan.freeze_params`` under ``plan.FUSED_KEY``, gate biases
+        included), so the traced step concatenates activations only — never
+        weight tables."""
         xy = jnp.concatenate([x_t, y_prev], axis=-1)
+        k = self._fused_gate_k
+        from repro.kernels.block_circulant.plan import FUSED_KEY
+
+        fused = params.get(FUSED_KEY)
+        if fused is not None:
+            return circ.block_circulant_apply_multi(
+                xy, None, impl=self.swm.impl,
+                w_freq_cat=(fused["wr"], fused["wi"]),
+                splits=(self.d_cell // k,) * 4, bias_cat=fused["bias"],
+                k=k, karatsuba=self.swm.karatsuba,
+            )
         gates = ("i", "f", "c", "o")
         pairs = [(params[f"W{g}x"], params[f"W{g}r"]) for g in gates]
         frozen = all("wr" in px and "wi" in px and "wr" in pr and "wi" in pr
@@ -90,7 +105,7 @@ class SWMLSTM:
         biases = [params[f"b{g}"] for g in gates]
         return circ.block_circulant_apply_multi(
             xy, ws, biases=biases, impl=self.swm.impl, w_freqs=w_freqs,
-            k=self._fused_gate_k, karatsuba=self.swm.karatsuba,
+            k=k, karatsuba=self.swm.karatsuba,
         )
 
     def step(self, params, x_t, y_prev, c_prev):

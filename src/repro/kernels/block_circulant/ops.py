@@ -334,6 +334,9 @@ def block_circulant_matmul_multi(
     biases: Optional[Sequence[Optional[jax.Array]]] = None,
     activation: str = "none",
     w_freqs: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
+    w_freq_cat: Optional[Tuple[jax.Array, jax.Array]] = None,
+    splits: Optional[Sequence[int]] = None,
+    bias_cat: Optional[jax.Array] = None,
     k: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> List[jax.Array]:
@@ -344,7 +347,23 @@ def block_circulant_matmul_multi(
     of N grid pipelines each re-streaming the same x tiles, the concatenated
     (Σp_i, q, k) table amortizes the forward DFT of x and the pipeline setup
     across every projection.
+
+    ``w_freq_cat=(wr, wi)`` + ``splits`` + ``k`` (and optionally
+    ``bias_cat``) take the table already stacked — the pre-concatenated
+    frozen group ``plan.freeze_params`` builds at serve-load time — so the
+    traced launch contains no weight-side concatenate at all.
     """
+    if w_freq_cat is not None:
+        if splits is None or k is None:
+            raise ValueError("w_freq_cat needs explicit splits and k")
+        if biases is not None:
+            raise ValueError("w_freq_cat takes bias_cat, not per-proj biases")
+        ps = [int(p) for p in splits]
+        y = block_circulant_matmul(
+            x, None, bias=bias_cat, activation=activation,
+            w_freq=w_freq_cat, k=k, interpret=interpret,
+        )
+        return split_outputs(y, ps, k)
     if w_freqs is not None:
         ps = [wr.shape[0] for wr, _ in w_freqs]
         if k is None:

@@ -22,7 +22,12 @@ with many same-shaped layers derives it once.
 ``freeze_params`` walks a (specs, params) pair and attaches ``wr`` / ``wi``
 next to every circulant-tagged ``w`` leaf — the serving engine calls it once
 after loading a checkpoint, and ``nn.Linear`` picks the frozen path up
-automatically.
+automatically. It also *pre-concatenates* the known fused projection groups
+(attention Q/K/V; the LSTM's 8 gate tables + gate biases) into one stacked
+table per group under the reserved ``"_fused"`` key — exactly the data a
+:func:`build_multi_plan` ``BCMultiPlan`` would carry — so the traced
+prefill/decode steps launch the fused projection without a single
+``jnp.concatenate`` over weight tables in their jaxpr.
 """
 
 from __future__ import annotations
@@ -48,7 +53,13 @@ __all__ = [
     "clear_plan_cache",
     "freeze_params",
     "count_frozen_tables",
+    "FUSED_KEY",
 ]
+
+# Reserved param-tree key for a pre-concatenated multi-projection frozen
+# group ({"wr", "wi"[, "bias"]}). Attached by freeze_params; consumed by the
+# attention QKV / LSTM gate fused paths via ``w_freq_cat``.
+FUSED_KEY = "_fused"
 
 # Default batch hint for tile choice when the runtime batch is unknown at
 # plan-build time. Tile sizes (pt, qt) depend on B only when the VMEM budget
@@ -228,6 +239,73 @@ def build_multi_plan(
 # ---------------------------------------------------------------------------
 
 
+def _frozen_pair(d) -> bool:
+    return isinstance(d, dict) and "wr" in d and "wi" in d
+
+
+def _attach_fused(out: Dict[str, Any]) -> bool:
+    """Attach a pre-concatenated ``FUSED_KEY`` entry when ``out`` is one of
+    the known fused projection groups. Concatenation runs EAGERLY here (at
+    freeze time), so the traced fused launch reads one resident table —
+    no per-trace ``jnp.concatenate`` over weights. Returns True if added.
+
+    Groups recognized:
+      * attention Q/K/V — sibling dicts ``q``/``k``/``v`` of frozen tables
+        sharing (q, K): stack along the output-block (p) axis;
+      * LSTM gates — ``W{g}x``/``W{g}r`` for g in i/f/c/o: each gate's x-
+        and recurrent-side tables concatenate along q, the four gates stack
+        along p, and the gate biases ``b{g}`` pre-concatenate alongside.
+
+    The per-projection ``wr``/``wi`` entries are KEPT alongside the fused
+    copy: cross-attention layers share the q/k/v param structure but
+    cannot take the fused launch (their K/V read a different input), and
+    freeze-time detection cannot tell self- from cross-attention. The
+    extra footprint is the rfft tables of the fused projections only —
+    small next to the KV cache, and the time-domain ``w`` is still
+    dropped.
+    """
+    if FUSED_KEY in out:
+        return False
+    qkv = [out.get(n) for n in ("q", "k", "v")]
+    if all(_frozen_pair(d) for d in qkv):
+        wrs = [d["wr"] for d in qkv]
+        shapes = {w.shape[:-3] + w.shape[-2:] for w in wrs}
+        if all(w.ndim >= 3 for w in wrs) and len(shapes) == 1:
+            out[FUSED_KEY] = {
+                "wr": jnp.concatenate(wrs, axis=-3),
+                "wi": jnp.concatenate([d["wi"] for d in qkv], axis=-3),
+            }
+            return True
+        return False
+    gates = []
+    for g in ("i", "f", "c", "o"):
+        px, pr, b = out.get(f"W{g}x"), out.get(f"W{g}r"), out.get(f"b{g}")
+        if not (_frozen_pair(px) and _frozen_pair(pr) and b is not None):
+            return False
+        gates.append((px, pr, b))
+    x_shapes = {px["wr"].shape for px, _, _ in gates}
+    r_shapes = {pr["wr"].shape for _, pr, _ in gates}
+    if len(x_shapes) != 1 or len(r_shapes) != 1:
+        return False
+    xs, rs = x_shapes.pop(), r_shapes.pop()
+    # same output blocks and same K on both sides (same k by construction:
+    # the x/r tables of one gate share out_dim, and equal K + equal out_dim
+    # pins k); q may differ (d_in vs d_proj)
+    if len(xs) != 3 or len(rs) != 3 or xs[0] != rs[0] or xs[-1] != rs[-1]:
+        return False
+    out[FUSED_KEY] = {
+        "wr": jnp.concatenate(
+            [jnp.concatenate([px["wr"], pr["wr"]], axis=-2)
+             for px, pr, _ in gates], axis=-3),
+        "wi": jnp.concatenate(
+            [jnp.concatenate([px["wi"], pr["wi"]], axis=-2)
+             for px, pr, _ in gates], axis=-3),
+        "bias": jnp.concatenate(
+            [b.reshape(-1).astype(jnp.float32) for _, _, b in gates]),
+    }
+    return True
+
+
 def freeze_params(specs, params) -> Dict[str, Any]:
     """Replace every circulant table with its frozen frequency weights.
 
@@ -239,8 +317,14 @@ def freeze_params(specs, params) -> Dict[str, Any]:
     would roughly double the circulant weight footprint in device memory
     for the process lifetime of a serving job. ``nn.Linear`` (and the
     fused lstm/attention/ffn paths) detect the frozen entries and take the
-    no-fft path without touching ``w``. Idempotent; non-circulant subtrees
-    are returned as-is (same objects, no copy).
+    no-fft path without touching ``w``.
+
+    Fused groups (attention Q/K/V, LSTM gates) additionally get a
+    pre-concatenated stacked table under :data:`FUSED_KEY` — built here,
+    eagerly, from the just-frozen per-projection tables (zero extra rfft
+    work), so the fused launch needs no weight concatenation in its trace.
+    Idempotent; non-circulant subtrees are returned as-is (same objects,
+    no copy).
     """
     from repro.nn.module import ParamSpec
 
@@ -270,6 +354,7 @@ def freeze_params(specs, params) -> Dict[str, Any]:
     for key in params:
         if key not in out and key not in dropped:
             out[key] = params[key]
+    changed = _attach_fused(out) or changed
     return out if changed else params
 
 
@@ -278,8 +363,11 @@ def count_frozen_tables(params) -> int:
     tree — i.e. how many rfft(w) transforms :func:`freeze_params` performed.
     The serving engine's freeze-once invariant is asserted against this
     (``ops.freq_weights_trace_count`` must grow by exactly this much at
-    engine construction and not at all afterwards)."""
+    engine construction and not at all afterwards). ``FUSED_KEY`` entries
+    are skipped: they are eager concatenations of already-frozen tables,
+    not additional transforms."""
     if not isinstance(params, dict):
         return 0
     n = 1 if ("wr" in params and "wi" in params) else 0
-    return n + sum(count_frozen_tables(v) for v in params.values())
+    return n + sum(count_frozen_tables(v) for key, v in params.items()
+                   if key != FUSED_KEY)

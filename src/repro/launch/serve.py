@@ -40,6 +40,21 @@ def _parse_buckets(ap: argparse.ArgumentParser, text: str, flag: str):
         ap.error(f"{flag} must be comma-separated ints, got {text!r}")
 
 
+def _parse_pos_int(ap: argparse.ArgumentParser, text: str, flag: str,
+                   default: int) -> int:
+    """Positive-int flag value; malformed or non-positive input routed
+    through ap.error (same contract as the bucket flags)."""
+    if not text:
+        return default
+    try:
+        v = int(text)
+    except ValueError:
+        ap.error(f"{flag} must be a positive int, got {text!r}")
+    if v < 1:
+        ap.error(f"{flag} must be a positive int, got {text!r}")
+    return v
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -66,6 +81,14 @@ def main():
                     help="demo the streaming submit()/step()/poll()/drain() "
                          "API: requests trickle in while the engine runs "
                          "(continuous engine only)")
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="off",
+                    help="reuse resident KV rows across requests sharing a "
+                         "prompt head: admission copies the matched rows "
+                         "from a donor slot and prefills only the tail "
+                         "(continuous engine only)")
+    ap.add_argument("--prefix-capacity", default="",
+                    help="max entries in the prefix index (LRU; default "
+                         "256). Forgetting an entry never frees slot rows.")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -94,15 +117,22 @@ def main():
                                     "--prompt-buckets")
     decode_buckets = _parse_buckets(ap, args.decode_buckets,
                                     "--decode-buckets")
+    prefix_cache = args.prefix_cache == "on"
+    prefix_capacity = _parse_pos_int(ap, args.prefix_capacity,
+                                     "--prefix-capacity", 256)
+    if args.prefix_capacity and not prefix_cache:
+        ap.error("--prefix-capacity has no effect without --prefix-cache on")
     if args.engine == "wave":
         if args.temperature > 0 or args.top_k or args.stop_token:
             ap.error("--engine wave is a greedy-only baseline; "
                      "--temperature/--top-k/--stop-token need the "
                      "continuous engine")
         if (args.prompt_buckets or args.decode_buckets
-                or args.policy != "fifo" or args.prewarm or args.stream):
+                or args.policy != "fifo" or args.prewarm or args.stream
+                or prefix_cache or args.prefix_capacity):
             ap.error("--prompt-buckets/--decode-buckets/--policy/--prewarm/"
-                     "--stream only apply to the continuous engine")
+                     "--stream/--prefix-cache/--prefix-capacity only apply "
+                     "to the continuous engine")
         engine = WaveEngine(model, cfg, params, batch=args.batch,
                             cache_len=args.cache_len)
     else:
@@ -111,7 +141,9 @@ def main():
                                  cache_len=args.cache_len,
                                  prompt_buckets=prompt_buckets,
                                  decode_buckets=decode_buckets,
-                                 policy=args.policy)
+                                 policy=args.policy,
+                                 prefix_cache=prefix_cache,
+                                 prefix_capacity=prefix_capacity)
         except ValueError as e:
             if "_buckets" in str(e):
                 ap.error(str(e))
@@ -128,15 +160,30 @@ def main():
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    # with the prefix cache on, draw prompts from a few shared heads so the
+    # reuse path actually fires (head length clipped to leave decode room)
+    head_len = min(args.cache_len // 4, max(0, args.cache_len
+                                            - args.max_new - 8))
+    heads = []
+    if prefix_cache and head_len >= 8:
+        heads = [rng.integers(0, cfg.vocab, size=head_len).astype(np.int32)
+                 for _ in range(2)]
+
+    def _prompt(i):
+        tail = rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(3, 9))).astype(np.int32)
+        if heads:
+            return np.concatenate([heads[i % len(heads)], tail])
+        return tail
+
     reqs = [
         Request(
-            rng.integers(0, cfg.vocab,
-                         size=int(rng.integers(3, 9))).astype(np.int32),
+            _prompt(i),
             max_new=args.max_new,
             stop_tokens=tuple(args.stop_token),
             sampling=sampling,
         )
-        for _ in range(args.n_requests)
+        for i in range(args.n_requests)
     ]
     t0 = time.perf_counter()
     if args.stream:
@@ -163,6 +210,11 @@ def main():
         extra = (f" decode-shapes={sorted(engine.stats.decode_shapes)}"
                  f" decode-rows/token="
                  f"{engine.stats.decode_rows_per_token:.2f}")
+        if prefix_cache:
+            extra += (f" prefix-hit-rate="
+                      f"{engine.stats.prefix_hit_rate:.2f}"
+                      f" prefill-tokens-saved="
+                      f"{engine.stats.prefill_tokens_saved}")
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
           f"prefill compiles={engine.prefill_compiles} "
           f"decode compiles={engine.decode_compiles} "

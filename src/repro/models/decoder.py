@@ -34,7 +34,18 @@ from repro.nn.module import ParamSpec
 from repro.nn.rwkv import RWKV6ChannelMix, RWKV6TimeMix, init_rwkv_cache
 from repro.nn.ssm import Mamba, init_mamba_cache
 
-__all__ = ["HybridDecoderLM"]
+__all__ = ["HybridDecoderLM", "local_attn_cache_len"]
+
+
+def local_attn_cache_len(cfg: ModelConfig, cache_len: int) -> int:
+    """Ring length an ``attn_local`` layer's KV cache is allocated with.
+
+    Single source of truth shared by cache allocation (``_layer_cache``)
+    and the serve engine's prefix-cache guard (a ring shorter than
+    ``cache_len`` overwrites donor rows past the window, so prefix reuse
+    must refuse those configs)."""
+    w = cfg.sliding_window or cache_len
+    return min(w, cache_len)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,9 +149,8 @@ class HybridDecoderLM:
             return init_kv_cache(batch, cache_len, cfg.n_kv_heads,
                                  cfg.head_dim, cfg.dtype)
         if lspec.mixer == "attn_local":
-            w = cfg.sliding_window or cache_len
-            return init_kv_cache(batch, min(w, cache_len), cfg.n_kv_heads,
-                                 cfg.head_dim, cfg.dtype)
+            return init_kv_cache(batch, local_attn_cache_len(cfg, cache_len),
+                                 cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
         if lspec.mixer == "mamba":
             m = Mamba(cfg)
             return init_mamba_cache(batch, m.d_inner, cfg.mamba_d_state,

@@ -251,14 +251,28 @@ class Attention:
         """Q/K/V as ONE stacked-p circulant launch when all three tables are
         circulant with one block size (they share the input x, so the
         forward transform of x and the kernel pipeline are amortized 3-way).
-        Returns (q, k, v) flat projections or None when not fusable."""
+        Returns (q, k, v) flat projections or None when not fusable.
+
+        Frozen (serve) trees carry the pre-concatenated stacked table that
+        ``plan.freeze_params`` attaches under ``plan.FUSED_KEY`` — the
+        launch then reads one resident (Σp_i, q, K) table and its trace
+        contains no weight-side concatenate."""
         qp, kp, vp = self.q_proj, self.k_proj, self.v_proj
         kb = qp.block_size
         if not (qp.is_circulant and kp.is_circulant and vp.is_circulant
                 and kp.block_size == kb and vp.block_size == kb):
             return None
         from repro.core import circulant as circ
+        from repro.kernels.block_circulant.plan import FUSED_KEY
 
+        fused = params.get(FUSED_KEY)
+        if fused is not None:
+            return circ.block_circulant_apply_multi(
+                x, None, impl=self.cfg.swm.impl,
+                w_freq_cat=(fused["wr"], fused["wi"]),
+                splits=tuple(p.out_dim // kb for p in (qp, kp, vp)),
+                k=kb, karatsuba=self.cfg.swm.karatsuba,
+            )
         names = ("q", "k", "v")
         frozen = all("wr" in params[n] and "wi" in params[n] for n in names)
         return circ.block_circulant_apply_multi(

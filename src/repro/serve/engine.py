@@ -61,6 +61,53 @@ of that split, applied at three levels:
   (submit all, drain, reorder) — slot state persists across calls instead
   of being reset.
 
+* **Shared-prefix KV reuse** (``prefix_cache=True``) — the CirCNN /
+  C-LSTM discipline of touching resident state once, applied across
+  requests: prompt heads another request already prefilled are never
+  recomputed. Lifecycle of the prefix index:
+
+  1. *match* — admission hashes the new prompt's block-aligned prefixes
+     (multiples of ``prefix_block``, longest first) against a host-side
+     index of resident slot rows; a hit names a donor slot and a match
+     length ``m`` (capped so the tail still produces the first-token
+     logits and the tail bucket's pad ring slots stay clear of the copied
+     rows: ``m + tail_bucket <= cache_len``);
+  2. *copy rows* — the prefill launch gathers the donor's cache rows and
+     masks every entry at position ``>= m`` (``pos -> -1``), seeding the
+     consumer's rows with exactly the shared head — a device-side row
+     copy instead of ``m`` tokens of recomputation
+     (``EngineStats.prefill_tokens_saved`` / ``prefix_hits``);
+  3. *tail prefill* — only the unmatched tail runs through the model,
+     bucket-shaped as usual (reuse composes with prompt buckets), with
+     tail positions ``m..L-1`` and pad writes parked on masked ring slots
+     past the tail;
+  4. *refcount* — a matched donor's rows are pinned (``_slot_refs``)
+     until the launch that copies them has run: a pinned free slot is
+     never handed to a new request and never borrowed as a decode pad
+     lane, so multi-launch admission rounds cannot overwrite rows a
+     later launch still reads;
+  5. *evict* — eviction is explicit: rows leave the index only when
+     their slot is reassigned to a new request, borrowed as a pad lane
+     (least-recently-used donors sacrificed first), or the LRU index
+     exceeds ``prefix_capacity`` (which forgets entries — rows in slots
+     are never freed while referenced).
+
+  Greedy outputs are bit-identical with the prefix cache on or off:
+  masked cache entries contribute exactly zero to attention, and the
+  copied rows are bit-identical to the rows a full prefill would have
+  written (bucket-padding invariance, same params, same positions).
+
+* **Donated decode buffers** (``donate=True``, default) — every
+  prefill/decode executable takes the slot cache through
+  ``jax.jit(..., donate_argnums)``, so the compaction scatter updates the
+  cache in place (XLA input-output aliasing) instead of allocating and
+  copying a second full cache per step — the PR-3 gather→decode→scatter
+  path's extra HBM round-trip disappears. The engine threads the returned
+  cache handle through every call (a donated input buffer is invalid
+  after the call), and ``prewarm()`` COMMITS its warm-up results for the
+  same reason: discarding them would kill the live cache. Donation never
+  changes the math — outputs are bit-identical with it on or off.
+
 Padding correctness: bucketed prefill left-pads prompts and numbers the pad
 positions *negatively* (real tokens are always positions ``0..L-1``). The
 attention mask drops every key with ``kv_pos < 0``, and pad cache writes
@@ -75,6 +122,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -315,6 +363,28 @@ def _reject_recurrent_mixers(cfg: ModelConfig, what: str) -> None:
                 )
 
 
+def _reject_short_ring_caches(cfg: ModelConfig, cache_len: int) -> None:
+    """Prefix reuse copies a donor's rows for positions ``[0, m)``; a local
+    attention layer with a ring cache shorter than ``cache_len`` overwrites
+    those rows as soon as the donor decodes past the window, so a resident
+    donor cannot guarantee the shared head is still intact. Refuse rather
+    than serve wrong tokens."""
+    from repro.models.decoder import local_attn_cache_len
+
+    for group in cfg.layer_groups():
+        for lspec in group.layers:
+            if lspec.mixer == "attn_local":
+                ring = local_attn_cache_len(cfg, cache_len)
+                if ring < cache_len:
+                    raise ValueError(
+                        f"prefix_cache needs full-length KV caches, but "
+                        f"'attn_local' layers keep a ring of {ring} < "
+                        f"cache_len={cache_len} entries: donor rows past "
+                        f"the window are overwritten and the shared head "
+                        f"cannot be copied"
+                    )
+
+
 class Scheduler:
     """Admission queue: ``fifo`` or ``sjf`` (shortest-prompt-first).
 
@@ -334,11 +404,20 @@ class Scheduler:
         self.policy = policy
         self._heap: list = []
         self._seq = 0
+        self._front = 0
 
     def submit(self, item, prompt_len: int) -> None:
         key = prompt_len if self.policy == "sjf" else 0
         heapq.heappush(self._heap, (key, self._seq, item))
         self._seq += 1
+
+    def put_front(self, item, prompt_len: int) -> None:
+        """Re-enqueue ahead of every same-key item (deferred admissions:
+        a request bumped out of a round goes back to the head of the line,
+        not the tail)."""
+        key = prompt_len if self.policy == "sjf" else 0
+        self._front -= 1
+        heapq.heappush(self._heap, (key, self._front, item))
 
     def take(self, n: int) -> list:
         out = []
@@ -367,6 +446,9 @@ class EngineStats:
     padded_prompt_tokens: int = 0          # bucket-padding waste
     slot_steps_active: int = 0             # Σ over decode steps of active slots
     decode_rows: int = 0                   # Σ over decode steps of rows launched
+    prefix_lookups: int = 0                # admissions probed against the index
+    prefix_hits: int = 0                   # admissions seeded from a donor
+    prefill_tokens_saved: int = 0          # Σ matched prefix tokens never rerun
     prefill_shapes: Set[Tuple[int, int]] = dataclasses.field(
         default_factory=set)
     decode_shapes: Set[int] = dataclasses.field(default_factory=set)
@@ -391,12 +473,20 @@ class EngineStats:
             return 0.0
         return self.decode_rows / self.tokens_generated
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-index probes that found a usable donor."""
+        if self.prefix_lookups == 0:
+            return 0.0
+        return self.prefix_hits / self.prefix_lookups
+
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
         d["prefill_shapes"] = sorted(self.prefill_shapes)
         d["decode_shapes"] = sorted(self.decode_shapes)
         d["tokens_per_decode_step"] = self.tokens_per_decode_step
         d["decode_rows_per_token"] = self.decode_rows_per_token
+        d["prefix_hit_rate"] = self.prefix_hit_rate
         return d
 
 
@@ -422,7 +512,15 @@ class ServeEngine:
     * frozen frequency weights are computed exactly once at construction
       (``freeze_params``) and shared by every bucketed executable — the
       paper's BRAM-resident FFT(w), with the jitted steps containing no
-      ``rfft(w)``.
+      ``rfft(w)`` (fused QKV groups additionally read one pre-concatenated
+      stacked table — no weight concatenate in any trace);
+    * ``prefix_cache=True`` reuses resident KV rows across requests that
+      share a prompt head: admission copies the matched rows from a donor
+      slot and prefills only the tail (see the module docstring for the
+      match → copy → tail-prefill → refcount → evict lifecycle);
+    * ``donate=True`` (default) donates the cache into every executable so
+      the place-back scatter updates HBM in place — no per-step full-cache
+      copy; all callers thread the returned handle.
 
     Streaming API: ``submit(request) -> req_id`` enqueues, ``step()``
     advances admission plus one decode round, ``poll(req_id)`` snapshots
@@ -440,7 +538,11 @@ class ServeEngine:
                  cache_len: int, *,
                  prompt_buckets: Optional[Sequence[int]] = None,
                  decode_buckets: Optional[Sequence[int]] = None,
-                 policy: str = "fifo"):
+                 policy: str = "fifo",
+                 prefix_cache: bool = False,
+                 prefix_block: int = 8,
+                 prefix_capacity: int = 256,
+                 donate: bool = True):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine supports decoder-LM families; enc-dec serving "
@@ -455,6 +557,18 @@ class ServeEngine:
         self.model, self.cfg, self.params = model, cfg, params
         self.batch, self.cache_len = int(batch), int(cache_len)
         self.policy = policy
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_block = int(prefix_block)
+        self.prefix_capacity = int(prefix_capacity)
+        if self.prefix_cache:
+            if self.prefix_block < 1:
+                raise ValueError(
+                    f"prefix_block must be >= 1, got {prefix_block}")
+            if self.prefix_capacity < 1:
+                raise ValueError(
+                    f"prefix_capacity must be >= 1, got {prefix_capacity}")
+            _reject_short_ring_caches(cfg, self.cache_len)
+        self.donate = bool(donate)
         if prompt_buckets is None:
             prompt_buckets = pow2_buckets(min(8, self.cache_len),
                                           self.cache_len)
@@ -474,8 +588,16 @@ class ServeEngine:
         # raw (unjitted) fns kept for jaxpr introspection in tests
         self._prefill_fn = self._prefill_and_place
         self._decode_fn = self._decode_and_place
-        self._prefill = jax.jit(self._prefill_fn)
-        self._decode = jax.jit(self._decode_fn)
+        # donating the cache argument lets XLA alias input and output slot
+        # caches: the place-back scatter updates HBM in place instead of
+        # writing a second full cache per launch. Every caller threads the
+        # returned handle (the donated input is dead after the call).
+        if self.donate:
+            self._prefill = jax.jit(self._prefill_fn, donate_argnums=(3,))
+            self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        else:
+            self._prefill = jax.jit(self._prefill_fn)
+            self._decode = jax.jit(self._decode_fn)
         # streaming state: queued/running outputs, claimed-on-drain results
         self._sched = Scheduler(self.policy)
         self._next_rid = 0
@@ -504,16 +626,50 @@ class ServeEngine:
         return int(self._decode._cache_size())
 
     # -- device-side steps --------------------------------------------------
-    def _prefill_and_place(self, params, tokens, positions, cache, slot_idx):
-        """Prefill a bucket-shaped group into fresh rows, then scatter those
-        rows into the persistent slot cache at ``slot_idx``."""
+    def _prefill_and_place(self, params, tokens, positions, cache, slot_idx,
+                           donor_idx=None, match_len=None):
+        """Prefill a bucket-shaped group, then scatter its rows into the
+        persistent slot cache at ``slot_idx``.
+
+        Without ``donor_idx`` the group starts from fresh (empty) rows.
+        With it (the prefix-cache path), row ``j`` starts from a copy of
+        slot ``donor_idx[j]``'s cache rows with every entry at position
+        ``>= match_len[j]`` masked out — the shared prompt head is copied,
+        not recomputed, and ``tokens``/``positions`` carry only the
+        unmatched tail. A missing match passes the row's own slot with
+        ``match_len 0`` (fully-masked seed == fresh rows, bit-identical:
+        masked entries contribute exactly zero to attention)."""
         B = tokens.shape[0]
-        fresh = self.model.init_cache(B, self.cache_len)
+        if donor_idx is None:
+            fresh = self.model.init_cache(B, self.cache_len)
+        else:
+            fresh = self._seed_cache(cache, donor_idx, match_len)
         logits, filled, _ = self.model.forward(
             params, tokens, positions=positions, cache=fresh,
             logits_mode="last",
         )
         return logits[:, -1], self._place_cache(cache, filled, slot_idx)
+
+    def _seed_cache(self, cache, donor_idx, match_len):
+        """Bucket-shaped cache seeded from donor slot rows: entries at
+        positions ``>= match_len`` (donor tail/decode rows and donor pads)
+        get ``pos -> -1`` so only the matched head survives the attention
+        mask. k/v values past the match are left in place — masked lanes
+        contribute exactly zero, so they never reach the output."""
+        sub = self._gather_cache(cache, donor_idx)
+        out = []
+        for axis, g in zip(self._repeat_axes, sub):
+            m = match_len[:, None] if axis == 0 else match_len[None, :, None]
+
+            def seed(d, m=m):
+                return {
+                    name: (jnp.where(leaf < m, leaf, -1)
+                           if name == "pos" else leaf)
+                    for name, leaf in d.items()
+                }
+
+            out.append({name: seed(layer) for name, layer in g.items()})
+        return out
 
     def _decode_and_place(self, params, tokens, cache, pos, slot_idx):
         """Gather the slot rows named by ``slot_idx`` into a bucket-shaped
@@ -558,6 +714,72 @@ class ServeEngine:
         self._slot_pos = np.zeros(B, np.int32)
         self._slot_last = np.zeros(B, np.int32)
         self._slot_left = np.zeros(B, np.int64)
+        # prefix-cache state: resident prompt per slot, block-aligned
+        # prefix index (LRU), donor refcounts, recency clock
+        self._slot_prompt: List[Optional[np.ndarray]] = [None] * B
+        self._slot_refs = np.zeros(B, np.int64)
+        self._slot_touch = np.zeros(B, np.int64)
+        self._prefix_index: "OrderedDict[Tuple[int, bytes], int]" = \
+            OrderedDict()
+        self._clock = 0
+
+    # -- prefix index -------------------------------------------------------
+    def _index_drop_slot(self, slot: int) -> None:
+        """Evict a slot's rows from the prefix index — called exactly when
+        the rows are about to be overwritten (slot reassigned to a new
+        request, or borrowed as a decode pad lane). Rows referenced by an
+        in-flight prefill are pinned and must never get here."""
+        assert self._slot_refs[slot] == 0, (
+            f"evicting donor slot {slot} with {self._slot_refs[slot]} "
+            f"in-flight references"
+        )
+        if self._slot_prompt[slot] is None:
+            return
+        self._slot_prompt[slot] = None
+        for key in [k for k, s in self._prefix_index.items() if s == slot]:
+            del self._prefix_index[key]
+
+    def _index_insert(self, slot: int, prompt: np.ndarray) -> None:
+        """Register a freshly-prefilled slot as a donor: every block-aligned
+        prefix of its prompt maps to the slot. The index is LRU-bounded by
+        ``prefix_capacity`` (forgetting an entry never frees slot rows)."""
+        if not self.prefix_cache:
+            return
+        self._slot_prompt[slot] = prompt
+        self._clock += 1
+        self._slot_touch[slot] = self._clock
+        raw = prompt.tobytes()                 # one serialization, sliced
+        for m in range(self.prefix_block, prompt.shape[0] + 1,
+                       self.prefix_block):
+            key = (m, raw[: m * prompt.itemsize])
+            self._prefix_index[key] = slot
+            self._prefix_index.move_to_end(key)
+        while len(self._prefix_index) > self.prefix_capacity:
+            self._prefix_index.popitem(last=False)
+
+    def _match_prefix(self, prompt: np.ndarray) -> Tuple[Optional[int], int]:
+        """Longest usable indexed prefix of ``prompt``: match lengths are
+        multiples of ``prefix_block``, capped at ``L - 1`` (the tail must
+        produce the first-token logits) and by ``m + tail_bucket <=
+        cache_len`` (the tail's pad ring slots must stay clear of the
+        copied donor rows). Returns ``(donor_slot, m)`` or ``(None, 0)``."""
+        if not self.prefix_cache or not self._prefix_index:
+            return None, 0
+        L = int(prompt.shape[0])
+        raw = prompt.tobytes()                 # one serialization, sliced
+        m = ((L - 1) // self.prefix_block) * self.prefix_block
+        while m >= self.prefix_block:
+            key = (m, raw[: m * prompt.itemsize])
+            slot = self._prefix_index.get(key)
+            if slot is not None:
+                Sb = pick_bucket(L - m, self.prompt_buckets)
+                if m + Sb <= self.cache_len:
+                    self._prefix_index.move_to_end(key)
+                    self._clock += 1
+                    self._slot_touch[slot] = self._clock
+                    return int(slot), m
+            m -= self.prefix_block
+        return None, 0
 
     def _validate(self, r: Request) -> None:
         _validate_request(r, self.cache_len)
@@ -586,39 +808,159 @@ class ServeEngine:
             self._finish(slot)
 
     # -- admission ----------------------------------------------------------
+    def _resolve_placement(self, rids: List[int],
+                           match: Dict[int, Tuple[Optional[int], int]],
+                           free: List[int]):
+        """Resolve this round's slot placement under donor pins.
+
+        Placement pool = free slots with no in-flight references. When
+        pinned free donors starve it: a donor with a SINGLE consumer hosts
+        that consumer itself (the row copy and the overwrite happen in one
+        launch — no other launch reads it); other consumers are DEFERRED
+        to the next round (put_front: they re-match against the same
+        resident donors) rather than burn their matches; if a round would
+        otherwise admit nothing, matches are dropped — progress always
+        wins over reuse.
+
+        Returns ``(keep, avail, self_place)``: the requests to admit, an
+        ordered slot pool covering all of them, and per-request
+        self-placement onto their own donor. Pin invariant on return:
+        every remaining pin belongs to a kept request's match and is
+        released right after the launch that consumes it.
+        """
+        n = len(rids)
+        avail = [i for i in free if self._slot_refs[i] == 0]
+        self_place: Dict[int, int] = {}
+        if len(avail) >= n:
+            return rids, avail, self_place
+        keep = list(rids)
+        deferred: List[int] = []
+        for rid in reversed(rids):
+            if len(avail) + len(self_place) >= len(keep):
+                break
+            donor, _ = match[rid]
+            if donor is None or self._active[donor]:
+                continue
+            if self._slot_refs[donor] == 1:
+                self_place[rid] = donor            # sole consumer: host it
+                continue
+            if len(keep) == 1:
+                continue
+            keep.remove(rid)
+            deferred.append(rid)
+            match.pop(rid)
+            self._slot_refs[donor] -= 1
+            if self._slot_refs[donor] == 0:
+                avail.append(donor)
+        if len(avail) + len(self_place) < len(keep):
+            # still starved (defensive): give up matches (full prefill)
+            # so the round still admits
+            for rid in keep:
+                donor, _ = match[rid]
+                if donor is None or self._active[donor] \
+                        or rid in self_place:
+                    continue
+                self._slot_refs[donor] -= 1
+                match[rid] = (None, 0)
+                if self._slot_refs[donor] == 0:
+                    avail.append(donor)
+                if len(avail) + len(self_place) >= len(keep):
+                    break
+        # deferred holds latest-taken first; pushing in that order leaves
+        # the earliest-taken at the queue head (original order)
+        for rid in deferred:
+            self._sched.put_front(rid, self._req[rid].prompt_len)
+        return keep, avail, self_place
+
     def _admit(self) -> None:
         free = [i for i in range(self.batch) if not self._active[i]]
         n = min(len(free), len(self._sched))
         if n == 0:
             return
+        rids = self._sched.take(n)
+        # prefix matching against the RESIDENT index (donors placed in
+        # earlier rounds — active or finished-but-unreclaimed slots); a
+        # matched donor is pinned until the launch that copies it has run
+        match: Dict[int, Tuple[Optional[int], int]] = {}
+        for rid in rids:
+            p = np.asarray(self._req[rid].prompt, np.int32).reshape(-1)
+            donor, m = self._match_prefix(p)
+            match[rid] = (donor, m)
+            if donor is not None:
+                self._slot_refs[donor] += 1
+        rids, avail, self_place = self._resolve_placement(rids, match, free)
+        if self.prefix_cache:
+            # lookups count ADMITTED requests only (deferred ones re-match
+            # next round; counting both would dilute the hit rate)
+            self.stats.prefix_lookups += len(rids)
         by_bucket: Dict[int, List[int]] = {}
-        for rid in self._sched.take(n):
-            Sb = pick_bucket(self._req[rid].prompt_len, self.prompt_buckets)
+        for rid in rids:
+            tail = self._req[rid].prompt_len - match[rid][1]
+            Sb = pick_bucket(tail, self.prompt_buckets)
             by_bucket.setdefault(Sb, []).append(rid)
         for Sb in sorted(by_bucket):
-            rids = by_bucket[Sb]
-            for Bb in batch_split(len(rids), self.batch_buckets):
-                chunk, rids = rids[:Bb], rids[Bb:]
-                slots = [free.pop(0) for _ in chunk]
+            rids_b = by_bucket[Sb]
+            for Bb in batch_split(len(rids_b), self.batch_buckets):
+                chunk, rids_b = rids_b[:Bb], rids_b[Bb:]
+                slots = []
+                for rid in chunk:
+                    s = self_place.get(rid)
+                    if s is None:
+                        s = avail.pop(0)
+                    else:
+                        # the consumer's own pin; released before eviction
+                        # so _index_drop_slot sees an unreferenced slot
+                        self._slot_refs[s] -= 1
+                    slots.append(s)
                 toks = np.zeros((Bb, Sb), np.int32)
                 pos = np.zeros((Bb, Sb), np.int32)
+                donor_idx = np.asarray(slots, np.int32).copy()
+                mlen = np.zeros(Bb, np.int32)
+                prompts: List[np.ndarray] = []
                 for j, rid in enumerate(chunk):
                     p = np.asarray(self._req[rid].prompt,
                                    np.int32).reshape(-1)
-                    L = p.shape[0]
-                    toks[j, Sb - L:] = p
-                    # pads get negative positions -> attention-masked
-                    pos[j] = np.arange(Sb, dtype=np.int32) - (Sb - L)
-                    self.stats.padded_prompt_tokens += Sb - L
-                logits, self.cache = self._prefill(
-                    self.params, jnp.asarray(toks), jnp.asarray(pos),
-                    self.cache, jnp.asarray(np.asarray(slots, np.int32)),
-                )
+                    prompts.append(p)
+                    donor, m = match[rid]
+                    T = p.shape[0] - m
+                    toks[j, Sb - T:] = p[m:]
+                    if m > 0:
+                        # tail continues at positions m..m+T-1; pad writes
+                        # park on ring slots m+T..m+Sb-1 with NEGATIVE
+                        # stored positions (masked), clear of the copied
+                        # donor rows [0, m)
+                        pos[j, Sb - T:] = m + np.arange(T, dtype=np.int32)
+                        pos[j, : Sb - T] = (
+                            m + T + np.arange(Sb - T, dtype=np.int32)
+                            - self.cache_len)
+                        donor_idx[j] = donor
+                        mlen[j] = m
+                        self.stats.prefix_hits += 1
+                        self.stats.prefill_tokens_saved += int(m)
+                    else:
+                        # pads get negative positions -> attention-masked
+                        pos[j] = np.arange(Sb, dtype=np.int32) - (Sb - T)
+                    self.stats.padded_prompt_tokens += Sb - T
+                for slot in slots:
+                    self._index_drop_slot(slot)   # rows being overwritten
+                args = (self.params, jnp.asarray(toks), jnp.asarray(pos),
+                        self.cache,
+                        jnp.asarray(np.asarray(slots, np.int32)))
+                if self.prefix_cache:
+                    args += (jnp.asarray(donor_idx), jnp.asarray(mlen))
+                logits, self.cache = self._prefill(*args)
+                # copies landed: release this chunk's donor pins
+                # (self-placed consumers already released theirs)
+                for rid in chunk:
+                    donor, _ = match[rid]
+                    if donor is not None and rid not in self_place:
+                        self._slot_refs[donor] -= 1
                 self.stats.prefill_calls += 1
                 self.stats.prefill_shapes.add((Bb, Sb))
                 lg = np.asarray(logits)
                 for j, (slot, rid) in enumerate(zip(slots, chunk)):
                     r = self._req[rid]
+                    self._index_insert(slot, prompts[j])
                     self._slot_req[slot] = rid
                     self._slot_rng[slot] = r.sampling.make_rng()
                     self._slot_pos[slot] = r.prompt_len
@@ -637,10 +979,26 @@ class ServeEngine:
         # enough: Bb <= batch so Bb - n <= batch - n). The scatter-back
         # therefore has no duplicate indices, and pad-lane writes land on
         # dead rows that the next admission's prefill fully overwrites.
+        # With the prefix cache on, free rows may be resident donors whose
+        # rows are still valuable: borrow non-donor rows first, and evict
+        # (least-recently-used first) any donor row that must be borrowed —
+        # its rows are about to take an unmasked pad write.
         idx = act
         if Bb > n:
             free = np.nonzero(~self._active)[0]
-            idx = np.concatenate([act, free[: Bb - n]])
+            if self.prefix_cache:
+                plain = [int(i) for i in free
+                         if self._slot_prompt[i] is None]
+                donors = sorted(
+                    (int(i) for i in free
+                     if self._slot_prompt[i] is not None),
+                    key=lambda s: self._slot_touch[s])
+                borrow = (plain + donors)[: Bb - n]
+                for s in borrow:
+                    self._index_drop_slot(s)
+                idx = np.concatenate([act, np.asarray(borrow, act.dtype)])
+            else:
+                idx = np.concatenate([act, free[: Bb - n]])
         idx = idx.astype(np.int32)
         logits, self.cache = self._decode(
             self.params, jnp.asarray(self._slot_last[idx][:, None]),
@@ -662,7 +1020,24 @@ class ServeEngine:
         grid is finite — the wave baseline has no analogue (one executable
         per distinct wave length it happens to see). Returns the number of
         live executables.
+
+        Warm-up results are COMMITTED, not discarded: the cache argument is
+        donated (``donate_argnums``), so the input buffer is invalid after
+        every call and discarding the returned handle would kill the live
+        cache. Commitment is safe because every warm-up write is masked
+        (all-pad prefill rows; decode probes at position ``-1``) — but it
+        does touch free slot rows, so prewarm requires an IDLE engine (no
+        active slots) and flushes the prefix index (resident donor rows in
+        free slots take pad writes).
         """
+        if self._active.any():
+            raise RuntimeError(
+                "prewarm() requires an idle engine: warm-up launches commit "
+                "(masked) writes into slot rows that active requests own"
+            )
+        if self.prefix_cache:
+            for s in range(self.batch):
+                self._index_drop_slot(s)
         for Sb in self.prompt_buckets:
             for Bb in self.batch_buckets:
                 toks = jnp.zeros((Bb, Sb), jnp.int32)
@@ -671,13 +1046,19 @@ class ServeEngine:
                 pos = (jnp.broadcast_to(jnp.arange(Sb, dtype=jnp.int32),
                                         (Bb, Sb)) - Sb)
                 slots = jnp.arange(Bb, dtype=jnp.int32)
-                self._prefill(self.params, toks, pos, self.cache, slots)
+                args = (self.params, toks, pos, self.cache, slots)
+                if self.prefix_cache:
+                    # self-donor with match 0: fully-masked seed, same
+                    # calling convention (and executable) as real traffic
+                    args += (slots, jnp.zeros((Bb,), jnp.int32))
+                _, self.cache = self._prefill(*args)
         for Bb in self.decode_buckets:
-            # results are discarded (jit is functional): slot state and
-            # self.cache are untouched, only the executable cache warms
-            self._decode(
+            # probe at position -1: the ring write lands with a negative
+            # stored position (masked), so committing the returned cache
+            # leaves the math untouched
+            _, self.cache = self._decode(
                 self.params, jnp.zeros((Bb, 1), jnp.int32), self.cache,
-                jnp.zeros((Bb,), jnp.int32),
+                -jnp.ones((Bb,), jnp.int32),
                 jnp.arange(Bb, dtype=jnp.int32),
             )
         return self.prefill_compiles + self.decode_compiles

@@ -191,6 +191,191 @@ def test_decode_compile_budget_bounded_by_buckets(lm):
 
 
 # ---------------------------------------------------------------------------
+# Shared-prefix KV reuse + donated decode buffers
+# ---------------------------------------------------------------------------
+
+
+def _shared_head_mix(seed, n, head_len=12, vocab=48, n_heads=2):
+    """Requests drawn from a few long shared prompt heads + private tails —
+    the workload shape the prefix cache exists for."""
+    rng = np.random.default_rng(seed)
+    heads = [rng.integers(0, vocab, size=head_len).astype(np.int32)
+             for _ in range(n_heads)]
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, vocab,
+                            size=int(rng.integers(1, 5))).astype(np.int32)
+        reqs.append(Request(np.concatenate([heads[i % n_heads], tail]),
+                            max_new=int(rng.integers(2, 6))))
+    return reqs
+
+
+def _check_prefix_invariants(eng):
+    """No dangling pins, and every index entry points at a slot that still
+    holds the indexed prefix (eviction removed stale entries)."""
+    assert (eng._slot_refs == 0).all()
+    for (m, bts), slot in eng._prefix_index.items():
+        p = eng._slot_prompt[slot]
+        assert p is not None and p.shape[0] >= m
+        assert p[:m].tobytes() == bts
+
+
+def test_prefix_cache_bit_identical_shared_heads(lm):
+    """Acceptance: shared-head traffic hits the prefix cache (tokens saved)
+    while greedy outputs stay bit-identical to cache-off and to the
+    unbatched reference loop."""
+    cfg, model, params = lm
+    reqs = _shared_head_mix(20, 9)
+    off = ServeEngine(model, cfg, params, batch=3, cache_len=32)
+    on = ServeEngine(model, cfg, params, batch=3, cache_len=32,
+                     prefix_cache=True)
+    outs = off.generate(reqs)
+    assert on.generate(reqs) == outs
+    assert outs == _reference_loop(model, cfg, off.params, reqs, 32)
+    assert on.stats.prefix_hits > 0
+    assert on.stats.prefill_tokens_saved > 0
+    assert 0.0 < on.stats.prefix_hit_rate <= 1.0
+    # cache-off engine never probes or saves anything
+    assert off.stats.prefix_lookups == 0
+    assert off.stats.prefill_tokens_saved == 0
+    _check_prefix_invariants(on)
+
+
+def test_prefix_cache_disjoint_workload_all_misses(lm):
+    """Disjoint prompts: the index never matches, outputs are unchanged,
+    and the saved-token counter stays zero (no false hits)."""
+    cfg, model, params = lm
+    reqs = _mix(21, 7)
+    off = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    on = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                     prefix_cache=True, prefix_block=16)
+    assert on.generate(reqs) == off.generate(reqs)
+    assert on.stats.prefix_hits == 0
+    assert on.stats.prefill_tokens_saved == 0
+    _check_prefix_invariants(on)
+
+
+def test_prefix_refcount_defers_instead_of_clobbering(lm):
+    """Every queued request matches the SAME donor rows while placement is
+    starved (2 slots, all free slots are donors): the refcount must keep
+    the pinned donor out of placement/pad-lane reuse, deferral must keep
+    the engine making progress, and outputs stay bit-identical."""
+    cfg, model, params = lm
+    head = np.arange(8, dtype=np.int32) + 3
+    reqs = [Request(np.concatenate([head, np.asarray([40 + i], np.int32)]),
+                    max_new=3) for i in range(6)]
+    off = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    on = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                     prefix_cache=True)
+    outs = off.generate(reqs)
+    assert on.generate(reqs) == outs
+    # round 1 (both slots empty) can't hit; everything admitted against a
+    # resident donor afterwards must
+    assert on.stats.prefix_hits >= 3
+    assert on.stats.prefill_tokens_saved == 8 * on.stats.prefix_hits
+    _check_prefix_invariants(on)
+
+
+def test_prefix_capacity_bounds_index(lm):
+    cfg, model, params = lm
+    reqs = _shared_head_mix(22, 8, n_heads=3)
+    off = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    on = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                     prefix_cache=True, prefix_capacity=2)
+    assert on.generate(reqs) == off.generate(reqs)
+    assert len(on._prefix_index) <= 2
+    _check_prefix_invariants(on)
+    with pytest.raises(ValueError, match="prefix_capacity"):
+        ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                    prefix_cache=True, prefix_capacity=0)
+    with pytest.raises(ValueError, match="prefix_block"):
+        ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                    prefix_cache=True, prefix_block=0)
+
+
+def test_prefix_cache_rejects_short_ring_caches():
+    """A local-attention ring shorter than cache_len overwrites donor rows
+    past the window — prefix reuse must refuse, not serve wrong tokens."""
+    from repro.configs.base import LayerGroup, LayerSpec
+
+    cfg = _cfg(sliding_window=8,
+               groups=(LayerGroup(
+                   layers=(LayerSpec(mixer="attn_local", ffn="dense"),),
+                   repeat=2),))
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+    with pytest.raises(ValueError, match="full-length KV caches"):
+        ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                    prefix_cache=True)
+    # without prefix reuse the config still serves
+    ServeEngine(model, cfg, params, batch=2, cache_len=32)
+
+
+def test_donation_on_off_equivalence(lm):
+    """donate_argnums is pure plumbing: outputs bit-identical with the
+    cache donated or copied, with and without the prefix cache (the
+    REPRO_INTERPRET CI matrix runs this file under interpret mode too)."""
+    cfg, model, params = lm
+    reqs = _mix(23, 6)
+    d_on = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    d_off = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                        donate=False)
+    assert d_on.donate and not d_off.donate
+    assert d_on.generate(reqs) == d_off.generate(reqs)
+    shared = _shared_head_mix(24, 6)
+    p_on = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                       prefix_cache=True)
+    p_off = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                        prefix_cache=True, donate=False)
+    assert p_on.generate(shared) == p_off.generate(shared)
+    assert p_on.stats.prefill_tokens_saved \
+        == p_off.stats.prefill_tokens_saved > 0
+
+
+def test_prewarm_commits_donated_caches_and_requires_idle(lm):
+    """prewarm must COMMIT its warmed cache handles (a donated input buffer
+    is dead after the call — the old discard behavior would kill the live
+    cache), serve compile-free afterwards with outputs unchanged, and
+    refuse to run over active slots."""
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                      prompt_buckets=(8, 16), prefix_cache=True)
+    n = eng.prewarm()
+    assert n == eng.max_prefill_variants + eng.max_decode_variants
+    reqs = _shared_head_mix(25, 5)
+    want = ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                       prompt_buckets=(8, 16)).generate(reqs)
+    assert eng.generate(reqs) == want
+    assert eng.prefill_compiles == eng.max_prefill_variants
+    assert eng.decode_compiles == eng.max_decode_variants
+    # idle again: prewarm may rerun (no-op compiles, masked writes only)
+    eng.prewarm()
+    assert eng.generate(reqs) == want
+    # active slots: refuse
+    eng2 = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    eng2.submit(Request(np.arange(4, dtype=np.int32), max_new=6))
+    eng2.step()
+    with pytest.raises(RuntimeError, match="idle"):
+        eng2.prewarm()
+    eng2.drain()
+
+
+def test_prefix_cache_compile_budget(lm):
+    """Acceptance: with the prefix cache enabled the executable counts stay
+    within max_prefill_variants + len(decode_buckets) — seeding rides in
+    the same per-bucket executables, it never adds shapes."""
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=4, cache_len=32,
+                      prompt_buckets=(8, 16), prefix_cache=True)
+    eng.prewarm()
+    eng.generate(_shared_head_mix(26, 10))
+    eng.generate(_mix(27, 5))
+    assert eng.prefill_compiles <= eng.max_prefill_variants
+    assert eng.decode_compiles <= eng.max_decode_variants
+    assert eng.max_decode_variants == len(eng.decode_buckets)
+
+
+# ---------------------------------------------------------------------------
 # Streaming submit / step / poll / drain
 # ---------------------------------------------------------------------------
 

@@ -256,6 +256,108 @@ def test_freeze_params_roundtrip_linear():
 
 
 # ---------------------------------------------------------------------------
+# Pre-concatenated fused frozen groups (attention QKV, LSTM gates)
+# ---------------------------------------------------------------------------
+
+
+def _attn(impl="dft"):
+    from repro.configs.base import ModelConfig, SWMConfig
+    from repro.nn.attention import Attention
+
+    cfg = ModelConfig(name="fuse", n_layers=2, d_model=32, n_heads=2,
+                      n_kv_heads=1, head_dim=16, d_ff=64, vocab=48,
+                      remat="none", param_dtype="float32",
+                      compute_dtype="float32",
+                      swm=SWMConfig(block_size=8, impl=impl))
+    return Attention(cfg)
+
+
+@pytest.mark.parametrize("impl", ["dft", "pallas"])
+def test_freeze_params_fuses_attention_qkv(impl):
+    """freeze_params pre-concatenates the Q/K/V frozen tables into one
+    stacked table (FUSED_KEY): outputs are bit-identical to the
+    per-projection frozen path and the fused launch's jaxpr contains no
+    concatenate — the weight stack is resident, not rebuilt per trace."""
+    from repro.kernels.block_circulant.plan import FUSED_KEY, freeze_params
+    from repro.nn.module import init_params
+
+    att = _attn(impl)
+    params = init_params(att.specs(), 0)
+    frozen = freeze_params(att.specs(), params)
+    assert FUSED_KEY in frozen
+    fused = frozen[FUSED_KEY]
+    # stacked along p: q (4 blocks) + k (2) + v (2) of (q=4, K=5) tables
+    assert fused["wr"].shape == (8, 4, 5) and fused["wi"].shape == (8, 4, 5)
+    x = _rand((2, 3, 32), seed=1)
+    pos = jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32), (2, 3))
+    y_raw, _ = att(params, x, pos)
+    y_fused, _ = att(frozen, x, pos)
+    np.testing.assert_allclose(np.asarray(y_raw), np.asarray(y_fused),
+                               rtol=2e-5, atol=2e-5)
+    # bit-identical to the old frozen path (concat-in-trace of wr_i/wi_i)
+    nofuse = {k: v for k, v in frozen.items() if k != FUSED_KEY}
+    y_perproj, _ = att(nofuse, x, pos)
+    assert bool(jnp.all(y_fused == y_perproj))
+    jp = jax.make_jaxpr(lambda p, xx: att._fused_qkv(p, xx))(frozen, x)
+    assert "concatenate" not in str(jp)
+    if impl == "pallas":
+        # the kernel path has no fft primitive at all; the dft/freq path
+        # still transforms ACTIVATIONS (the paper's streaming x̂) — only
+        # the weight-side rfft is frozen out
+        assert "fft" not in str(jp)
+    # idempotent: re-freezing a fused tree is the identity
+    assert freeze_params(att.specs(), frozen) is frozen
+
+
+def test_freeze_params_fuses_lstm_gates():
+    """The 8 gate tables fuse along q (x ++ recurrent) then p (4 gates),
+    gate biases pre-concatenate alongside; the frozen step's only
+    concatenate is the [x_t ; y_prev] activation concat."""
+    from repro.configs.base import SWMConfig
+    from repro.core.lstm import SWMLSTM
+    from repro.kernels.block_circulant.plan import FUSED_KEY, freeze_params
+    from repro.nn.module import init_params
+
+    lstm = SWMLSTM(d_in=16, d_cell=32, d_proj=16,
+                   swm=SWMConfig(block_size=8, impl="dft",
+                                 targets=("attn", "ffn", "lstm")))
+    assert lstm._fused_gate_k == 8
+    params = init_params(lstm.specs(), 0)
+    frozen = freeze_params(lstm.specs(), params)
+    assert FUSED_KEY in frozen
+    fused = frozen[FUSED_KEY]
+    # 4 gates x (dc/k = 4) output blocks; (di + dp)/k = 4 input blocks
+    assert fused["wr"].shape == (16, 4, 5)
+    assert fused["bias"].shape == (4 * 32,)
+    xs = _rand((2, 4, 16), seed=2)
+    y_raw, _ = lstm(params, xs)
+    y_fused, _ = lstm(frozen, xs)
+    np.testing.assert_allclose(np.asarray(y_raw), np.asarray(y_fused),
+                               rtol=2e-5, atol=2e-5)
+    nofuse = {k: v for k, v in frozen.items() if k != FUSED_KEY}
+    y_perproj, _ = lstm(nofuse, xs)
+    assert bool(jnp.all(y_fused == y_perproj))
+    jp = jax.make_jaxpr(lambda p, a, b, c: lstm.step(p, a, b, c))(
+        frozen, xs[:, 0], jnp.zeros((2, 16)), jnp.zeros((2, 32)))
+    assert str(jp).count("concatenate") == 1       # [x_t ; y_prev] only
+
+
+def test_count_frozen_tables_skips_fused_entries():
+    """The fused entry is an eager concat of already-frozen tables — it
+    must not inflate the rfft(w) accounting the freeze-once regression
+    compares against."""
+    from repro.kernels.block_circulant.plan import (FUSED_KEY,
+                                                    count_frozen_tables,
+                                                    freeze_params)
+    from repro.nn.module import init_params
+
+    att = _attn()
+    frozen = freeze_params(att.specs(), init_params(att.specs(), 0))
+    assert FUSED_KEY in frozen
+    assert count_frozen_tables(frozen) == 4        # q, k, v, o — not _fused
+
+
+# ---------------------------------------------------------------------------
 # VMEM estimate is the single source of truth
 # ---------------------------------------------------------------------------
 
