@@ -1,15 +1,23 @@
 """Pallas block-circulant kernel: correctness-at-shape sweep + VMEM budget,
-plan-cached vs per-call forward, and fused vs unfused multi-projection.
+plan-cached vs per-call forward, fused vs unfused multi-projection, and
+forward+backward TRAIN-STEP timings (kernel-backed weight adjoint).
 
 Wall-times here run the kernel in INTERPRET mode (no TPU in this
 container) and are labeled as such — the meaningful outputs are the
 rel-error vs the dense oracle, the chosen tile sizes, the VMEM
 working-set estimate per tile (must be < 16 MB v5e VMEM), and the
 *structural* wins (no fft primitive on the plan path; 1 launch instead
-of 4 for fused gates), which carry to hardware.
+of 4 for fused gates; 3 Pallas launches and zero dense (P, Q)-grid
+dot_generals in the cached train step), which carry to hardware.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench \
+        --json kernel_bench_backward.json
 """
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +29,13 @@ from repro.kernels.block_circulant import (block_circulant_matmul,
                                            build_multi_plan, build_plan)
 from repro.kernels.block_circulant.kernel import (apply_activation,
                                                   choose_blocks,
-                                                  vmem_estimate)
+                                                  choose_blocks_dw,
+                                                  vmem_estimate,
+                                                  vmem_estimate_dw)
+from repro.kernels.block_circulant.ops import (count_pallas_launches,
+                                               outer_dot_shapes)
 from repro.kernels.block_circulant.ref import block_circulant_matmul_ref
+from repro.train.loop import make_grad_step
 
 
 def correctness_and_vmem():
@@ -120,11 +133,99 @@ def fused_vs_unfused_gates():
          f"interpret=True")
 
 
-def run():
+def backward_timings(json_path: str = ""):
+    """Train-step mode: forward vs forward+backward for the per-call path
+    (trainable time-domain tables) and the plan path (frozen frequency
+    params — QAT-style training directly in the frequency domain).
+
+    The trajectory artifact for the training path: per shape, the step
+    wall time, the Pallas launch count of the cached train step (forward z
+    + dx + dw = 3 — every adjoint is a kernel), the dw-kernel tile choice
+    with its VMEM working set, and the structural asserts (no dense
+    (P, Q)-grid dot_general outside kernels; no fft primitive in the
+    plan-path step).
+    """
+    report = {"mode": "train-step", "interpret": True, "shapes": []}
+    for (B, p, q, k) in [(64, 8, 8, 64), (32, 16, 16, 32)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, q * k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (p, q, k),
+                              jnp.float32) * (q * k) ** -0.5
+        yt = jax.random.normal(jax.random.PRNGKey(2), (B, p * k), jnp.float32)
+        batch = {"x": x, "y": yt}
+
+        loss = lambda params, b: (
+            (block_circulant_matmul(b["x"], params["w"]) - b["y"]) ** 2
+        ).mean()
+        step = make_grad_step(loss)
+        fwd = jax.jit(loss)
+        us_fwd = time_fn(fwd, {"w": w}, batch, iters=5, warmup=2)
+        us_step = time_fn(step, {"w": w}, batch, iters=5, warmup=2)
+        jp = jax.make_jaxpr(loss_and_grad_of(loss))({"w": w}, batch)
+        launches = count_pallas_launches(jp)
+        # every contraction must be a kernel launch: NO dot_general at all
+        # outside pallas_call (stronger than matching (p, q) dims, which
+        # a dense fallback over the expanded (p·k, q·k) shape would evade)
+        outer_dots = outer_dot_shapes(jp)
+        bB, pt, qt = choose_blocks_dw(B, p, q, k)
+        vm = vmem_estimate_dw(bB, pt, qt, k)
+        emit(f"kernel/train_step_B{B}_p{p}_q{q}_k{k}", us_step,
+             f"fwd_us={us_fwd:.2f};pallas_launches={launches};"
+             f"outer_dots={len(outer_dots)};dw_tiles=({bB},{pt},{qt});"
+             f"dw_vmem_bytes={vm};dw_vmem_ok={vm < 16 * 2**20};"
+             f"interpret=True")
+        assert launches == 3, launches          # forward z + dx + dw
+        assert outer_dots == [], outer_dots
+
+        plan = build_plan(w)
+        ploss = lambda pl, b: ((pl.apply(b["x"]) - b["y"]) ** 2).mean()
+        pstep = make_grad_step(ploss)
+        us_pstep = time_fn(pstep, plan, batch, iters=5, warmup=2)
+        pjp = jax.make_jaxpr(loss_and_grad_of(ploss))(plan, batch)
+        no_fft = "fft" not in str(pjp)
+        emit(f"kernel/train_step_plan_B{B}_p{p}_q{q}_k{k}", us_pstep,
+             f"no_fft_in_jaxpr={no_fft};"
+             f"pallas_launches={count_pallas_launches(pjp)};interpret=True")
+        assert no_fft
+
+        report["shapes"].append({
+            "B": B, "p": p, "q": q, "k": k,
+            "fwd_us": us_fwd, "train_step_us": us_step,
+            "train_step_plan_us": us_pstep,
+            "pallas_launches": launches, "outer_dots": len(outer_dots),
+            "dw_tiles": [bB, pt, qt], "dw_vmem_bytes": vm,
+            "plan_no_fft": no_fft,
+        })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+
+
+def loss_and_grad_of(loss):
+    """value_and_grad WITHOUT jit — tracable by make_jaxpr for structural
+    inspection of exactly what the cached train step executes."""
+    return jax.value_and_grad(loss)
+
+
+def run(json_path: str = ""):
     correctness_and_vmem()
     plan_vs_per_call()
     fused_vs_unfused_gates()
+    backward_timings(json_path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the train-step (backward) report as JSON")
+    ap.add_argument("--train-step-only", action="store_true",
+                    help="skip the forward-only sections")
+    args = ap.parse_args()
+    if args.train_step_only:
+        backward_timings(args.json)
+    else:
+        run(args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

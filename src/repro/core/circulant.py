@@ -55,6 +55,7 @@ __all__ = [
     "block_circulant_apply_fused",
     "block_circulant_apply_multi",
     "dft_bases",
+    "dft_bases_adjoint",
     "valid_block_size",
     "swm_flops",
     "dense_flops",
@@ -258,6 +259,32 @@ def dft_bases(k: int, dtype=jnp.float32):
         jnp.asarray(Ci, dtype),
         jnp.asarray(Si, dtype),
     )
+
+
+@functools.lru_cache(maxsize=64)
+def _dft_bases_adjoint_np(k: int):
+    C, S, Ci, Si = _dft_bases_np(k)
+    return (C, S, np.ascontiguousarray(Ci.T), np.ascontiguousarray(Si.T),
+            np.ascontiguousarray(C.T), np.ascontiguousarray(S.T))
+
+
+def dft_bases_adjoint(k: int, dtype=jnp.float32):
+    """Basis set for the transposed-geometry weight-adjoint (dw) kernel.
+
+    Returns ``(C, S, CiT, SiT, CT, ST)``:
+
+      * ``C, S``     — analysis bases for x̂ (as :func:`dft_bases`),
+      * ``CiT, SiT`` — adjoint of the inverse rDFT, applied to the upstream
+        cotangent g: ``gyr = g @ Ciᵀ``, ``gyi = g @ Siᵀ`` (the pullback of
+        ``y = yr@Ci + yi@Si``),
+      * ``CT, ST``   — adjoint of the forward rDFT, folding the frequency
+        cotangent back to the time domain: ``dw = dwr@Cᵀ + dwi@Sᵀ``.
+
+    Precomputed as numpy constants (lru-cached) so the dw kernel launch
+    carries no per-trace transpose of the basis matrices.
+    """
+    C, S, CiT, SiT, CT, ST = _dft_bases_adjoint_np(k)
+    return tuple(jnp.asarray(a, dtype) for a in (C, S, CiT, SiT, CT, ST))
 
 
 def _dft_fwd_math(x, w, karatsuba, cdt):

@@ -9,19 +9,53 @@ contraction across (taps × input-channel blocks):
     ŷ[n, p, f] = Σ_{t, j} ŵ[t, p, j, f] ∘ x̂[n, t, j, f]
 
 Storage: r²·C·P/k instead of r²·C·P. Compute: r²·(C/k)·(P/k)·O(k log k)·HW.
+
+Execution shares the block-circulant Linear machinery end to end: the
+(t, p, q, k) tap table reshapes to ONE (p, r²·q, k) block table — every
+(tap, input-block) pair is a circulant block of the im2col GEMM — and runs
+through ``kernels.block_circulant.ops.block_circulant_matmul``: the Pallas
+kernel (bias fused into the epilogue), the frozen frequency-weight path
+(``plan.freeze_params`` tags the table ``circulant`` and attaches
+``wr``/``wi``; serving never re-rffts it), tile choice / ``vmem_estimate``,
+and the transposed-geometry training adjoint (kernel-backed dw) all apply
+to conv exactly as to Linear. Patch extraction is a single strided gather
+(no Python tap loop), differentiable for the dx scatter-back.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.nn.module import ParamSpec
 
-__all__ = ["CirculantConv2D"]
+__all__ = ["CirculantConv2D", "extract_patches"]
+
+
+def extract_patches(x: jax.Array, r: int) -> jax.Array:
+    """x (B, H, W, C) -> im2col patches (B, Ho, Wo, r·r, C), VALID padding.
+
+    One strided gather pair (rows then cols) instead of an r² Python loop of
+    sliced copies; tap order is (i·r + j) — i (row offset) major — matching
+    the layout the tap-table reshape in :class:`CirculantConv2D` assumes.
+    Values are pure copies: bit-identical to the loop-of-slices im2col.
+    """
+    B, H, W, C = x.shape
+    if H < r or W < r:
+        raise ValueError(
+            f"conv input spatial dims ({H}, {W}) are smaller than "
+            f"ksize={r}: VALID padding would produce empty output; pad the "
+            f"input or reduce ksize"
+        )
+    Ho, Wo = H - r + 1, W - r + 1
+    rows = x[:, jnp.arange(r)[:, None] + jnp.arange(Ho)[None, :]]
+    # rows: (B, r, Ho, W, C); gather cols the same way
+    patches = rows[:, :, :, jnp.arange(r)[:, None] + jnp.arange(Wo)[None, :]]
+    # (B, r, Ho, r, Wo, C) -> (B, Ho, Wo, r, r, C) -> (B, Ho, Wo, r·r, C)
+    patches = jnp.transpose(patches, (0, 2, 4, 1, 3, 5))
+    return patches.reshape(B, Ho, Wo, r * r, C)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,9 +77,14 @@ class CirculantConv2D:
     def specs(self):
         r, C, P, k = self.ksize, self.in_ch, self.out_ch, self.k
         if k > 1:
+            # tagged "circulant" so plan.freeze_params swaps the tap table
+            # for its frozen rfft (wr, wi) at serve time, like nn.Linear;
+            # "conv_taps" makes the freeze store them pre-reshaped in the
+            # (p, r²·q, K) im2col block-table layout the kernel consumes
             w = ParamSpec((r * r, P // k, C // k, k), jnp.dtype(self.dtype),
                           (None, None, None, None), init="normal",
-                          scale=(r * r * C) ** -0.5)
+                          scale=(r * r * C) ** -0.5,
+                          tags=("circulant", "conv_taps"))
         else:
             w = ParamSpec((r * r, C, P), jnp.dtype(self.dtype),
                           (None, None, None), init="normal",
@@ -56,22 +95,27 @@ class CirculantConv2D:
     def __call__(self, params, x: jax.Array) -> jax.Array:
         """x (B, H, W, C) -> (B, H-r+1, W-r+1, P), VALID padding."""
         r, C, P, k = self.ksize, self.in_ch, self.out_ch, self.k
-        B, H, W, _ = x.shape
-        Ho, Wo = H - r + 1, W - r + 1
-        # im2col: (B, Ho, Wo, r*r, C)
-        patches = jnp.stack(
-            [x[:, i : i + Ho, j : j + Wo, :] for i in range(r) for j in range(r)],
-            axis=3,
-        )
-        w = params["w"]
+        B = x.shape[0]
+        patches = extract_patches(x, r)            # (B, Ho, Wo, r·r, C)
+        Ho, Wo = patches.shape[1], patches.shape[2]
         if k == 1:
+            w = params["w"]
             y = jnp.einsum("bhwtc,tcp->bhwp", patches, w.astype(x.dtype))
+            return y + params["b"].astype(y.dtype)
+        from repro.kernels.block_circulant import ops as bc_ops
+
+        p, q = P // k, C // k
+        x2d = patches.reshape(B * Ho * Wo, r * r * C)
+        w_bc, w_freq = None, None
+        if "wr" in params and "wi" in params:
+            # frozen tables: freeze_params already stored them in the
+            # (p, r²·q, K) block-table layout — no weight-side work here
+            w_freq = (params["wr"], params["wi"])
         else:
-            q = C // k
-            xb = patches.reshape(B, Ho, Wo, r * r, q, k)
-            xh = jnp.fft.rfft(xb.astype(jnp.float32), axis=-1)
-            wh = jnp.fft.rfft(w.astype(jnp.float32), axis=-1)  # (t, p, q, K)
-            yh = jnp.einsum("bhwtqf,tpqf->bhwpf", xh, wh)
-            y = jnp.fft.irfft(yh, n=k, axis=-1).reshape(B, Ho, Wo, P)
-            y = y.astype(x.dtype)
-        return y + params["b"].astype(y.dtype)
+            # (t, p, q, k) tap table -> ONE (p, r²·q, k) block table whose
+            # block index is t·q + j, matching the patch layout's (t, c)
+            w_bc = params["w"].transpose(1, 0, 2, 3).reshape(p, r * r * q, k)
+        y = bc_ops.block_circulant_matmul(
+            x2d, w_bc, bias=params["b"], w_freq=w_freq, k=k, q=r * r * q,
+        )
+        return y.reshape(B, Ho, Wo, P)

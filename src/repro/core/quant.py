@@ -3,8 +3,9 @@
 The paper uses 12-bit (DCNN) / 16-bit (LSTM) fixed point for weights and
 activations, verified with a bit-wise C++ simulator. TPUs have no 12-bit
 datapath, so we *simulate*: fake-quantize to (bits, frac_bits) fixed point
-with a straight-through estimator so the accuracy benchmarks (§4.2
-reproduction) can sweep bit widths.
+with a clipped straight-through estimator (gradient passes only through the
+representable range — saturated values absorb none) so the accuracy
+benchmarks (§4.2 reproduction) can sweep bit widths.
 """
 
 from __future__ import annotations
@@ -17,22 +18,37 @@ import jax.numpy as jnp
 __all__ = ["fixed_point", "quantize_tree"]
 
 
+def _rails(bits: int, frac_bits: int):
+    """(lo, hi) representable range of signed (bits).(frac_bits) fixed point."""
+    scale = float(2**frac_bits)
+    return -(2 ** (bits - 1)) / scale, (2 ** (bits - 1) - 1) / scale
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def fixed_point(x: jax.Array, bits: int = 12, frac_bits: int = 8) -> jax.Array:
-    """Round to signed (bits).(frac_bits) fixed point; STE gradient."""
+    """Round to signed (bits).(frac_bits) fixed point; clipped-STE gradient.
+
+    The straight-through estimator passes the cotangent only where the
+    forward did NOT saturate at the clip rails [lo, hi]: a weight pinned at
+    the rail cannot express a step in the direction that pushed it there,
+    so letting gradient through would silently accumulate updates the
+    quantized forward never reflects (the classic STE-vs-clipped-STE bug —
+    narrower bit widths saturate more weights and absorb more gradient).
+    """
     scale = float(2**frac_bits)
-    lo = -(2 ** (bits - 1)) / scale
-    hi = (2 ** (bits - 1) - 1) / scale
+    lo, hi = _rails(bits, frac_bits)
     q = jnp.round(x.astype(jnp.float32) * scale) / scale
     return jnp.clip(q, lo, hi).astype(x.dtype)
 
 
 def _fq_fwd(x, bits, frac_bits):
-    return fixed_point(x, bits, frac_bits), None
+    return fixed_point(x, bits, frac_bits), x
 
 
-def _fq_bwd(bits, frac_bits, _, g):
-    return (g,)
+def _fq_bwd(bits, frac_bits, x, g):
+    lo, hi = _rails(bits, frac_bits)
+    inside = (x >= lo) & (x <= hi)
+    return (jnp.where(inside, g, jnp.zeros_like(g)),)
 
 
 fixed_point.defvjp(_fq_fwd, _fq_bwd)

@@ -38,6 +38,24 @@ into 2-D MXU dots. (The pure-XLA ``dft``/``freq`` paths in
 ``repro.core.circulant`` remain the production fallback for toolchains
 without batched-dot support.) Correctness is validated in interpret mode
 against ``ref.block_circulant_matmul_ref`` over shape/dtype sweeps.
+
+Training adjoints (the paper's training-phase O(n log n) claim):
+
+  * dL/dx — the FORWARD kernel re-launched with the conjugated /
+    index-reversed frequency weights (a circulant transpose is the
+    index-reversed vector ⇒ conj(ŵ); the block table transposes p ↔ q).
+  * dL/dw — :func:`bc_dw_pallas`, the TRANSPOSED-GEOMETRY kernel below:
+    ``dŵ[p,q,f] = Σ_b ĝ[b,p,f] · conj(x̂[b,q,f])`` is the same per-bin
+    complex GEMM with the train batch promoted to the contraction axis.
+    Grid ``(p/pt, q/qt, B/bB)`` with b innermost; the (pt, qt, K)
+    frequency cotangent accumulates in VMEM scratch across the batch.
+    Both operands transform inside the kernel (g through the adjoint of
+    the inverse rDFT ``Ciᵀ/Siᵀ``, x through the analysis bases ``C/S``)
+    and the epilogue either folds the cotangent back to the time domain
+    (``dw = dwr@Cᵀ + dwi@Sᵀ`` — the `_bwd` path for trainable time-domain
+    tables) or writes the (dwr, dwi) pair raw (``freq_out=True`` — the
+    `_freq_bwd` path for frozen/plan frequency parameters). No dense
+    (B, P, f)×(B, Q, f) outer product is ever materialized in HBM.
 """
 
 from __future__ import annotations
@@ -50,8 +68,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bc_matmul_pallas", "choose_blocks", "choose_batch_block",
-           "vmem_estimate", "ACTIVATIONS", "apply_activation"]
+__all__ = ["bc_matmul_pallas", "bc_dw_pallas", "choose_blocks",
+           "choose_batch_block", "choose_blocks_dw", "choose_batch_block_dw",
+           "vmem_estimate", "vmem_estimate_dw", "ACTIVATIONS",
+           "apply_activation"]
 
 # Epilogue activations fused into the final-q writeback (the paper's
 # IFFT + peripheral stage). Keys are the only legal `activation=` values.
@@ -102,6 +122,53 @@ def choose_batch_block(B: int, pt: int, qt: int, k: int,
     while vmem_estimate(bB, pt, qt, k) > vmem_budget and bB > 8:
         bB //= 2
     return bB
+
+
+def vmem_estimate_dw(bB: int, pt: int, qt: int, k: int) -> int:
+    """Bytes of VMEM working set for one (pt, qt, bB) dw-kernel tile.
+
+    x and g tiles double-buffered, the (pt, qt, K) f32 frequency-cotangent
+    accumulator pair, the output tile (time-domain dw OR the (dwr, dwi)
+    pair — the larger of the two is charged), and the six resident basis
+    matrices. Shared by :func:`choose_blocks_dw` and kernel_bench.
+    """
+    K = k // 2 + 1
+    x_t = bB * qt * k * 4
+    g_t = bB * pt * k * 4
+    acc = 2 * pt * qt * K * 4
+    out = max(pt * qt * k, 2 * pt * qt * K) * 4
+    dft = 6 * k * K * 4
+    return 2 * (x_t + g_t) + acc + out + dft   # ×2: double buffering
+
+
+def choose_batch_block_dw(B: int, pt: int, qt: int, k: int,
+                          vmem_budget: int = 8 * 1024 * 1024) -> int:
+    """Batch (contraction) tile for FIXED (pt, qt) dw tiles — the cached
+    backward-geometry path, where the block-axis tiles are frozen by
+    ``plan.dw_geometry`` and only the runtime batch varies."""
+    bB = min(B, 128)
+    while vmem_estimate_dw(bB, pt, qt, k) > vmem_budget and bB > 8:
+        bB //= 2
+    return bB
+
+
+def choose_blocks_dw(B: int, p: int, q: int, k: int,
+                     vmem_budget: int = 8 * 1024 * 1024
+                     ) -> Tuple[int, int, int]:
+    """Pick (bB, pt, qt) tiles for the transposed-geometry dw kernel.
+
+    Same constraints as :func:`choose_blocks` with the roles permuted:
+    (pt, qt) tile the OUTPUT block grid, bB tiles the batch contraction.
+    """
+    unit = max(1, 128 // k)
+    pt = min(p, max(unit, 8 * unit))
+    qt = min(q, max(unit, 8 * unit))
+    bB = choose_batch_block_dw(B, pt, qt, k, vmem_budget)
+    while vmem_estimate_dw(bB, pt, qt, k) > vmem_budget and pt > unit:
+        pt = max(unit, pt // 2)
+    while vmem_estimate_dw(bB, pt, qt, k) > vmem_budget and qt > unit:
+        qt = max(unit, qt // 2)
+    return bB, pt, qt
 
 
 def choose_blocks(B: int, p: int, q: int, k: int,
@@ -248,3 +315,149 @@ def bc_matmul_pallas(
         ],
         interpret=interpret,
     )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Transposed-geometry weight adjoint: dL/dw as a per-bin complex GEMM with
+# the train batch promoted to the contraction axis
+# ---------------------------------------------------------------------------
+
+
+def _bc_dw_kernel(x_ref, g_ref, c_ref, s_ref, cit_ref, sit_ref, ct_ref,
+                  st_ref, *refs, k: int, nb: int, freq_out: bool):
+    """One (i, j, b) grid step of the dw kernel. Shapes (per tile):
+      x_ref   : (bB, qt·k)     g_ref : (bB, pt·k)
+      c/s     : (k, K)         cit/sit : (k, K)      ct/st : (K, k)
+      o_ref   : (pt, qt·k)             [freq_out=False — time-domain dw]
+      dwr/dwi : (pt, qt, K)            [freq_out=True  — frozen-param path]
+      r/i acc : (pt, qt, K) f32 scratch
+
+    ``dŵ[p,q,f] = Σ_b ĝ[b,p,f]·conj(x̂[b,q,f])`` — the forward kernel's
+    per-bin GEMM with batch as the contraction axis: g transforms through
+    the adjoint of the inverse rDFT (Ciᵀ/Siᵀ), x through the analysis
+    bases (C/S), conj(x̂) negates the imaginary part. The epilogue on the
+    final batch step either folds the cotangent back to the time domain
+    (dw = dwr@Cᵀ + dwi@Sᵀ) or writes the (dwr, dwi) pair raw.
+    """
+    if freq_out:
+        dwr_ref, dwi_ref, r_acc, i_acc = refs
+    else:
+        o_ref, r_acc, i_acc = refs
+    b = pl.program_id(2)
+    K = k // 2 + 1
+    bB = x_ref.shape[0]
+    qt = x_ref.shape[1] // k
+    pt = g_ref.shape[1] // k
+
+    @pl.when(b == 0)
+    def _zero():
+        r_acc[...] = jnp.zeros_like(r_acc)
+        i_acc[...] = jnp.zeros_like(i_acc)
+
+    xb = x_ref[...].astype(jnp.float32).reshape(bB * qt, k)
+    xr = (xb @ c_ref[...]).reshape(bB, qt, K)
+    xi = (xb @ s_ref[...]).reshape(bB, qt, K)
+    gb = g_ref[...].astype(jnp.float32).reshape(bB * pt, k)
+    # adjoint of the inverse rDFT on the MXU: gyr = g @ Ciᵀ, gyi = g @ Siᵀ
+    gyr = (gb @ cit_ref[...]).reshape(bB, pt, K)
+    gyi = (gb @ sit_ref[...]).reshape(bB, pt, K)
+    # per-bin complex GEMM, batch contracted: dŵ[p,q,f] += ĝ[b,p,f]·x̂*[b,q,f]
+    dn = (((0,), (0,)), ((2,), (2,)))   # contracting b; batching f
+
+    def dot(a, c):
+        # a (bB, pt, K), c (bB, qt, K) -> (K, pt, qt) -> (pt, qt, K)
+        r = jax.lax.dot_general(a, c, dimension_numbers=dn,
+                                preferred_element_type=jnp.float32)
+        return jnp.transpose(r, (1, 2, 0))
+
+    r_acc[...] += dot(gyr, xr) + dot(gyi, xi)
+    i_acc[...] += dot(gyi, xr) - dot(gyr, xi)
+
+    @pl.when(b == nb - 1)
+    def _finish():
+        if freq_out:
+            dwr_ref[...] = r_acc[...]
+            dwi_ref[...] = i_acc[...]
+        else:
+            dwr = r_acc[...].reshape(pt * qt, K)
+            dwi = i_acc[...].reshape(pt * qt, K)
+            # adjoint of the forward rDFT: dw = dwr@Cᵀ + dwi@Sᵀ
+            o_ref[...] = (dwr @ ct_ref[...] + dwi @ st_ref[...]).reshape(
+                pt, qt * k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_b", "block_p", "block_q", "freq_out",
+                     "interpret"),
+)
+def bc_dw_pallas(
+    x: jax.Array,
+    g: jax.Array,
+    c: jax.Array,
+    s: jax.Array,
+    cit: jax.Array,
+    sit: jax.Array,
+    ct: jax.Array,
+    st: jax.Array,
+    *,
+    k: int,
+    block_b: int,
+    block_p: int,
+    block_q: int,
+    freq_out: bool = False,
+    interpret: bool = False,
+):
+    """x (B, Q·k) and upstream cotangent g (B, P·k) -> weight adjoint.
+
+    ``freq_out=False`` returns the time-domain dw (P, Q·k) f32 (`_bwd`,
+    trainable block tables); ``freq_out=True`` returns the frequency
+    cotangent pair ``(dwr, dwi)`` each (P, Q, K) f32 (`_freq_bwd`, frozen
+    frequency parameters). Basis args come from
+    ``circulant.dft_bases_adjoint(k)``. Caller (ops.py) guarantees
+    B % block_b == 0, P % block_p == 0, Q % block_q == 0 (it pads
+    otherwise; zero-padded rows/cols contribute exact zeros).
+    """
+    B = x.shape[0]
+    Q = x.shape[1] // k
+    P = g.shape[1] // k
+    K = k // 2 + 1
+    grid = (P // block_p, Q // block_q, B // block_b)
+
+    kernel = functools.partial(_bc_dw_kernel, k=k, nb=grid[2],
+                               freq_out=freq_out)
+    in_specs = [
+        pl.BlockSpec((block_b, block_q * k), lambda i, j, b: (b, j)),
+        pl.BlockSpec((block_b, block_p * k), lambda i, j, b: (b, i)),
+        pl.BlockSpec((k, K), lambda i, j, b: (0, 0)),
+        pl.BlockSpec((k, K), lambda i, j, b: (0, 0)),
+        pl.BlockSpec((k, K), lambda i, j, b: (0, 0)),
+        pl.BlockSpec((k, K), lambda i, j, b: (0, 0)),
+        pl.BlockSpec((K, k), lambda i, j, b: (0, 0)),
+        pl.BlockSpec((K, k), lambda i, j, b: (0, 0)),
+    ]
+    if freq_out:
+        out_specs = (
+            pl.BlockSpec((block_p, block_q, K), lambda i, j, b: (i, j, 0)),
+            pl.BlockSpec((block_p, block_q, K), lambda i, j, b: (i, j, 0)),
+        )
+        out_shape = (
+            jax.ShapeDtypeStruct((P, Q, K), jnp.float32),
+            jax.ShapeDtypeStruct((P, Q, K), jnp.float32),
+        )
+    else:
+        out_specs = pl.BlockSpec((block_p, block_q * k),
+                                 lambda i, j, b: (i, j))
+        out_shape = jax.ShapeDtypeStruct((P, Q * k), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((block_p, block_q, K), jnp.float32),
+            pltpu.VMEM((block_p, block_q, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, g, c, s, cit, sit, ct, st)

@@ -40,7 +40,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.circulant import concat_biases, split_outputs
-from repro.kernels.block_circulant.kernel import choose_blocks, vmem_estimate
+from repro.kernels.block_circulant.kernel import (choose_blocks,
+                                                 choose_blocks_dw,
+                                                 vmem_estimate)
 from repro.kernels.block_circulant import ops as bc_ops
 
 __all__ = [
@@ -49,6 +51,7 @@ __all__ = [
     "build_plan",
     "build_multi_plan",
     "plan_geometry",
+    "dw_geometry",
     "geometry_cache_info",
     "clear_plan_cache",
     "freeze_params",
@@ -99,12 +102,35 @@ def plan_geometry(p: int, q: int, k: int, dtype: str = "float32",
     return PlanGeometry(p=p, q=q, k=k, pt=pt, qt=qt, p_pad=p_pad, q_pad=q_pad)
 
 
+@functools.lru_cache(maxsize=1024)
+def dw_geometry(p: int, q: int, k: int, dtype: str = "float32",
+                b_hint: int = _B_HINT) -> PlanGeometry:
+    """Cached BACKWARD geometry: tiles for the transposed-geometry weight
+    adjoint (``kernel.bc_dw_pallas``), keyed like :func:`plan_geometry`.
+
+    The dw kernel's (pt, qt) tile the output block grid and its batch tile
+    is the contraction axis — chosen once per (p, q, k) signature so every
+    train step with the same layer shape reuses both the tile derivation
+    AND the jitted dw executable (``bc_dw_pallas`` is keyed on static tile
+    sizes). The batch tile itself stays runtime-chosen
+    (``kernel.choose_batch_block_dw``), mirroring the forward plan path.
+    """
+    _, pt, qt = choose_blocks_dw(b_hint, p, q, k)
+    return PlanGeometry(p=p, q=q, k=k, pt=pt, qt=qt,
+                        p_pad=p + (-p) % pt, q_pad=q + (-q) % qt)
+
+
 def geometry_cache_info():
     return plan_geometry.cache_info()
 
 
+def dw_geometry_cache_info():
+    return dw_geometry.cache_info()
+
+
 def clear_plan_cache() -> None:
     plan_geometry.cache_clear()
+    dw_geometry.cache_clear()
 
 
 @functools.partial(
@@ -149,6 +175,15 @@ class BCPlan:
     def cache_key(self) -> Tuple:
         """The geometry-cache key this plan was derived from."""
         return (self.p, self.q, self.k, str(self.wr.dtype))
+
+    def dw_tiles(self) -> Tuple[int, int]:
+        """(pt, qt) tiles of the plan's weight-adjoint (dw) kernel — served
+        by the lru-cached :func:`dw_geometry` over the plan's PADDED table
+        shape (the frozen (wr, wi) carry the forward tile padding), so
+        repeated train steps reuse the same backward tiles/executable."""
+        geo = dw_geometry(int(self.wr.shape[0]), int(self.wr.shape[1]),
+                          self.k)
+        return (geo.pt, geo.qt)
 
     # -- apply ---------------------------------------------------------
     def apply(self, x: jax.Array) -> jax.Array:
@@ -341,7 +376,16 @@ def freeze_params(specs, params) -> Dict[str, Any]:
             if "wr" in params and "wi" in params:   # already frozen
                 out["wr"], out["wi"] = params["wr"], params["wi"]
             else:
-                out["wr"], out["wi"] = bc_ops.freq_weights(sub_param)
+                wr, wi = bc_ops.freq_weights(sub_param)
+                if "conv_taps" in sub_spec.tags:
+                    # conv tap tables (r², p, q, k) freeze straight into the
+                    # (p, r²·q, K) im2col block-table layout the kernel
+                    # consumes, so the traced conv step does no weight-side
+                    # transpose/reshape (freeze-once, like the fused groups)
+                    t, p, q, K = wr.shape
+                    wr = wr.transpose(1, 0, 2, 3).reshape(p, t * q, K)
+                    wi = wi.transpose(1, 0, 2, 3).reshape(p, t * q, K)
+                out["wr"], out["wi"] = wr, wi
                 changed = True
             if "w" in params:
                 dropped.add("w")

@@ -26,7 +26,30 @@ from repro.optim.optimizers import (adafactor_init, adafactor_update,
                                     clip_by_global_norm, global_norm)
 from repro.train.losses import chunked_cross_entropy
 
-__all__ = ["make_loss_fn", "make_train_step", "init_train_state"]
+__all__ = ["make_loss_fn", "make_train_step", "init_train_state",
+           "make_grad_step"]
+
+
+def make_grad_step(loss_fn: Callable, lr: float = 0.1):
+    """Minimal jitted SGD step over a bare ``loss_fn(params, batch)``.
+
+    The train-step harness used by the backward-path structural
+    regressions and ``benchmarks/kernel_bench.py``'s train-step mode: no
+    optimizer state, no model zoo — just value_and_grad plus an in-dtype
+    parameter update, so the cached step's jaxpr exposes exactly the
+    forward + adjoint computation (e.g. asserting the block-circulant
+    weight adjoint runs as a Pallas launch, never a dense (P, Q) einsum).
+    """
+
+    @jax.jit
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params = jax.tree.map(
+            lambda p, g: p - lr * g.astype(p.dtype), params, grads
+        )
+        return new_params, loss
+
+    return step
 
 
 def make_loss_fn(model, cfg: ModelConfig, tcfg: TrainConfig):
@@ -110,7 +133,10 @@ def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
             (grads, loss), metrics = jax.lax.scan(
                 body, (zero, jnp.zeros(())), micro
             )
-            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            # average over microbatches (the loss already accumulates /n in
+            # the scan body): reporting only the LAST microbatch's ce/aux
+            # made logged metrics disagree with the loss they feed
+            metrics = jax.tree.map(lambda m: m.mean(0), metrics)
             return loss, metrics, grads
         (loss, metrics), grads = grad_fn(params, batch)
         return loss, metrics, grads

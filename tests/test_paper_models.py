@@ -71,9 +71,33 @@ def test_fixed_point_quantization():
     assert float(q[2]) == pytest.approx(2047 / 256)
     assert float(q[3]) == pytest.approx(-2048 / 256)
     np.testing.assert_allclose(float(q[0]), round(0.1234567 * 256) / 256)
-    # straight-through gradient
+    # clipped straight-through gradient: identity inside the representable
+    # range, ZERO where the forward saturated at the rails (a weight pinned
+    # at the rail can't express the update the raw STE would feed it)
     g = jax.grad(lambda x: fixed_point(x, 12, 8).sum())(x)
-    np.testing.assert_allclose(np.asarray(g), 1.0)
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+
+@pytest.mark.parametrize("bits", (8, 12, 16))
+def test_fixed_point_clipped_ste_bitwidth_sweep(bits):
+    """Gradient mask tracks the rails across bit widths: the narrower the
+    format, the more of the real line is saturated and gradient-free."""
+    frac = bits - 4
+    scale = 2.0 ** frac
+    lo = -(2 ** (bits - 1)) / scale
+    hi = (2 ** (bits - 1) - 1) / scale
+    x = jnp.asarray([lo - 1.0, lo, lo / 2, 0.0, hi / 2, hi, hi + 1.0])
+    t = jnp.asarray([3.0, -2.0, 1.0, 5.0, -1.0, 2.0, 4.0])
+    g = jax.grad(lambda x: (fixed_point(x, bits, frac) * t).sum())(x)
+    expect = np.asarray(t) * np.asarray([0, 1, 1, 1, 1, 1, 0], np.float32)
+    np.testing.assert_allclose(np.asarray(g), expect)
+    # the forward is unchanged by the bwd fix: rails still clip
+    q = fixed_point(x, bits, frac)
+    assert float(q[0]) == lo and float(q[-1]) == hi
+    # quantize_tree inherits the clipped STE on every floating leaf
+    gt = jax.grad(
+        lambda tr: (quantize_tree(tr, bits, frac)["w"] * t).sum())({"w": x})
+    np.testing.assert_allclose(np.asarray(gt["w"]), expect)
 
 
 def test_asic_net_structure():
