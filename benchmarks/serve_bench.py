@@ -33,6 +33,14 @@ reported (same frozen-FFT(w) math, different orchestration); on the tail
 workload the bucketed engine must show strictly lower decode row-work per
 token than full-slot decode.
 
+A fourth workload, ``chaos``, replays the mixed traffic under seeded
+injected faults (transient launch failures, NaN-poisoned requests,
+deadlines under a step stall, drop-oldest shedding, and an engine-fatal
+fault recovered via snapshot/restore) and asserts the fault-tolerance
+contract instead of timing: no hang, every request terminal, no slot or
+refcount leak, unaffected outputs bit-identical, compile budget
+unchanged.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --json out.json
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --workload tail \
         --json out_tail.json
@@ -43,6 +51,7 @@ token than full-slot decode.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -124,7 +133,181 @@ def _workload_prefix(n_requests: int, cache_len: int, seed: int):
 
 
 WORKLOADS = {"mixed": _workload_mixed, "tail": _workload_tail,
-             "prefix": _workload_prefix}
+             "prefix": _workload_prefix, "chaos": _workload_mixed}
+
+
+def _run_chaos(n_requests, batch, cache_len, seed, json_path):
+    """Chaos workload: the mixed workload served under seeded injected
+    faults — a transient prefill launch failure, a transient decode launch
+    failure (retried), NaN-poisoned prompts, per-request deadlines under an
+    artificial step stall, drop-oldest load shedding, and an injected
+    engine-fatal fault recovered via snapshot/restore into a replacement
+    engine. Asserts the fault-tolerance contract end to end: the engine
+    never hangs (hard step budget), every request reaches a terminal
+    state, no slot or prefix-refcount leak, unaffected requests' greedy
+    outputs are bit-identical to the fault-free run, and the compile
+    budget is unchanged (the finiteness guard rides in the existing
+    executables). Writes the chaos-run JSON report for CI."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.guard import (EngineFatalError, ManualClock,
+                                   ServeFaultInjector, TERMINAL_STATES)
+    import tempfile
+
+    cfg = dataclasses.replace(_cfg(), name="serve-chaos",
+                              tie_embeddings=False)
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+    rng = np.random.default_rng(seed)
+    # prompts drawn strictly below 100 so a poison token >= 100 can only
+    # enter the model through the requests we poison on purpose
+    reqs = []
+    for _ in range(n_requests):
+        plen = int(rng.integers(2, 25))
+        max_new = int(rng.integers(2, min(25, cache_len - plen)))
+        reqs.append(Request(
+            rng.integers(0, 100, size=plen).astype(np.int32),
+            max_new=max_new))
+
+    def build(par, **kw):
+        return ServeEngine(model, cfg, par, batch=batch,
+                           cache_len=cache_len, **kw)
+
+    # fault-free baseline (clean params, no injector)
+    base_eng = build(params)
+    base_eng.prewarm()
+    base = base_eng.generate(reqs)
+    used = {int(t) for o in base for t in o}
+    poison_tok = next(t for t in range(cfg.vocab - 1, 99, -1)
+                      if t not in used)
+    params_poison = jax.tree.map(lambda x: x, params)
+    params_poison["embed"]["table"] = (
+        params_poison["embed"]["table"].at[poison_tok].set(jnp.nan))
+    # clean requests behave bit-identically under the poisoned params:
+    # the NaN embedding row is gather-only, and no clean prompt or
+    # baseline output ever feeds it
+
+    n_poison = max(1, n_requests // 6)
+    poison_reqs = [Request(np.asarray([3, poison_tok, 7], np.int32),
+                           max_new=4) for _ in range(n_poison)]
+    # extra requests with a tight TTL, submitted AFTER the clean traffic so
+    # drop-oldest shedding (which evicts the earliest submissions) cannot
+    # reach them — the injected 1 s stall at step 7 blows their deadline
+    # long before their 20-token budget completes
+    n_deadline = 2
+    deadline_reqs = [Request(np.asarray([5, 6, 7], np.int32), max_new=20,
+                             deadline_ms=30.0) for _ in range(n_deadline)]
+    max_queue = n_requests + n_deadline   # poison submits shed 2 clean reqs
+    clk = ManualClock()
+    inj = ServeFaultInjector(
+        fail_prefill_at={1},            # one transient prefill fault
+        fail_decode_at={2},             # one transient decode fault (retried)
+        fatal_decode_at={8},            # engine-fatal -> snapshot/restore
+        delay_at={7}, delay_s=1.0,      # step stall, past watchdog warmup
+        clock=clk)
+    eng_kw = dict(snapshot_every=2, max_queue=max_queue,
+                  shed_policy="drop-oldest", clock=clk)
+    with tempfile.TemporaryDirectory() as snap_dir:
+        eng = build(params_poison, fault_injector=inj,
+                    snapshot_dir=snap_dir, **eng_kw)
+        eng.prewarm()
+        budget_prefill = eng.max_prefill_variants
+        budget_decode = eng.max_decode_variants
+        rids = []
+        for r in reqs + deadline_reqs + poison_reqs:
+            rids.append(eng.submit(r))
+        max_steps = 50 * (n_requests + n_deadline + n_poison) + 200
+        steps = recoveries = slow_steps_seen = 0
+        while True:
+            if steps >= max_steps:
+                raise AssertionError(
+                    f"engine did not go idle within {max_steps} steps — "
+                    f"hang detected")
+            try:
+                more = eng.step()
+            except EngineFatalError:
+                assert recoveries == 0, "second engine-fatal fault"
+                recoveries += 1
+                slow_steps_seen = max(slow_steps_seen, eng.stats.slow_steps)
+                eng = build(params_poison, snapshot_dir=snap_dir, **eng_kw)
+                eng.restore()
+                continue
+            steps += 1
+            clk.advance(0.002)
+            if not more:
+                break
+        slow_steps_seen = max(slow_steps_seen, eng.stats.slow_steps)
+
+        statuses = {rid: eng.poll(rid) for rid in rids}
+        hist: dict = {}
+        for st in statuses.values():
+            hist[st.status] = hist.get(st.status, 0) + 1
+        # -- the chaos contract ------------------------------------------
+        assert all(st.status in TERMINAL_STATES
+                   for st in statuses.values()), "non-terminal request"
+        assert not eng._active.any() and len(eng._sched) == 0, "not idle"
+        assert (eng._slot_refs == 0).all(), "prefix refcount leak"
+        assert not eng._req and not eng._out, "request-table leak"
+        for (m, _), slot in eng._prefix_index.items():
+            assert eng._slot_prompt[slot] is not None, "prefix index leak"
+        mismatched = sum(
+            1 for i, rid in enumerate(rids[:n_requests])
+            if statuses[rid].status == "FINISHED"
+            and list(statuses[rid].tokens) != base[i])
+        assert mismatched == 0, (
+            f"{mismatched} unaffected requests diverged from the "
+            f"fault-free run")
+        finished_clean = sum(
+            1 for i, rid in enumerate(rids[:n_requests])
+            if statuses[rid].status == "FINISHED")
+        assert finished_clean > 0, "no clean request finished"
+        for rid in rids[n_requests:n_requests + n_deadline]:
+            assert statuses[rid].status == "EXPIRED", "deadline not enforced"
+        for rid in rids[n_requests + n_deadline:]:
+            assert statuses[rid].status == "FAILED", "poison not isolated"
+            assert "non-finite" in (statuses[rid].error or "")
+        assert eng.prefill_compiles <= budget_prefill, "compile budget blown"
+        assert eng.decode_compiles <= budget_decode, "compile budget blown"
+        assert eng.stats.recoveries == 1 and recoveries == 1
+        assert eng.stats.aborted >= n_poison
+        assert eng.stats.expired == n_deadline
+        assert eng.stats.rejected >= 1, "drop-oldest shedding never fired"
+        assert slow_steps_seen >= 1, "watchdog never flagged the stall"
+        s = eng.stats
+        report = {
+            "workload": {"name": "chaos", "n_requests": n_requests,
+                         "n_poison": n_poison, "n_deadline": n_deadline,
+                         "batch": batch, "cache_len": cache_len,
+                         "seed": seed, "poison_token": poison_tok,
+                         "host": "cpu-interpret"},
+            "injected": {"fail_prefill_at": [1], "fail_decode_at": [2],
+                         "fatal_decode_at": [8], "delay_at": [7]},
+            "steps": steps,
+            "statuses": hist,
+            "stats": s.as_dict(),
+            "contract": {
+                "all_terminal": True,
+                "no_hang": True,
+                "no_slot_or_refcount_leak": True,
+                "unaffected_bit_identical": True,
+                "poison_isolated": True,
+                "compile_budget_unchanged": True,
+                "recoveries": s.recoveries,
+            },
+        }
+    emit(f"serve/chaos_B{batch}_N{n_requests}", 0.0,
+         f"steps={steps};statuses={sorted(hist.items())};"
+         f"aborted={s.aborted};expired={s.expired};rejected={s.rejected};"
+         f"retries={s.launch_retries};recoveries={s.recoveries};"
+         f"snapshots={s.snapshots};slow_steps={slow_steps_seen};"
+         f"prefill_compiles={eng.prefill_compiles}"
+         f"<=budget={budget_prefill};host=cpu")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+    return report
 
 
 def _run(engine, warmup, reqs):
@@ -243,6 +426,8 @@ def _run_prefix(model, cfg, params, reqs, warmup, n_requests, batch,
 
 def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
         seed: int = 0, workload: str = "mixed", json_path: str = ""):
+    if workload == "chaos":
+        return _run_chaos(n_requests, batch, cache_len, seed, json_path)
     cfg = _cfg()
     model = HybridDecoderLM(cfg)
     params = init_params(model.specs(), 0)
@@ -335,7 +520,9 @@ def main():
                     help="mixed: wave-stalling traffic; tail: tail-heavy "
                          "traffic where decode compaction pays off; "
                          "prefix: shared-prompt-head traffic where the "
-                         "prefix cache skips repeated head prefill")
+                         "prefix cache skips repeated head prefill; "
+                         "chaos: mixed traffic under seeded injected "
+                         "faults, asserting the fault-tolerance contract")
     ap.add_argument("--n-requests", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)

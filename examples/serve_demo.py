@@ -8,6 +8,14 @@ finally shared-prefix KV reuse: requests sharing a long prompt head copy
 the resident rows from a donor slot instead of re-running prefill over
 the head (prefill_tokens_saved / prefix_hit_rate).
 
+The last section demonstrates the failure semantics: a seeded
+``ServeFaultInjector`` drives a transient decode launch failure (retried
+transparently), bounded admission with reject-new shedding
+(``QueueFullError`` backpressure), a per-request ``deadline_ms`` expiring
+on a ``ManualClock``, and ``cancel()`` — every request lands in exactly
+one terminal state (FINISHED/FAILED/EXPIRED/CANCELLED) with an ``error``
+reason on the unsuccessful ones.
+
     PYTHONPATH=src python examples/serve_demo.py
 """
 
@@ -19,6 +27,8 @@ from repro.data.pipeline import SyntheticLM
 from repro.models.decoder import HybridDecoderLM
 from repro.nn.module import init_params
 from repro.serve.engine import Request, SamplingParams, ServeEngine
+from repro.serve.guard import (ManualClock, QueueFullError,
+                               ServeFaultInjector)
 from repro.train.loop import init_train_state, make_train_step
 
 
@@ -119,6 +129,38 @@ def main():
     print(f"  prefix hits {s.prefix_hits - h0}/{len(tails)}; prefill "
           f"tokens saved {s.prefill_tokens_saved - s0} "
           f"(lifetime hit rate {s.prefix_hit_rate:.2f})")
+
+    # --- failure semantics under injected faults --------------------------
+    # a second engine serving the same weights through a seeded fault
+    # schedule: a transient decode launch failure (retried, outputs
+    # unchanged), a bounded admission queue with reject-new shedding, a
+    # per-request deadline on a manual clock, and cancellation — every
+    # request ends in exactly one terminal state.
+    print("\nfault injection:")
+    clk = ManualClock()
+    inj = ServeFaultInjector(fail_decode_at={1}, clock=clk)
+    ft_engine = ServeEngine(model, cfg, state["params"], batch=2,
+                            cache_len=64, prompt_buckets=(8, 16),
+                            max_queue=3, fault_injector=inj, clock=clk)
+    rids = [ft_engine.submit(Request(prompts[0], max_new=6)),
+            ft_engine.submit(Request(prompts[1], max_new=6,
+                                     deadline_ms=25.0)),
+            ft_engine.submit(Request(prompts[2], max_new=8))]
+    try:                               # queue is full: reject-new sheds
+        ft_engine.submit(Request(prompts[3], max_new=4))
+    except QueueFullError as e:
+        print(f"  shed: {e}")
+    ft_engine.cancel(rids[2])
+    while ft_engine.step():            # each step "takes" 10 ms
+        clk.advance(0.010)
+    for rid in rids:
+        v = ft_engine.poll(rid)
+        err = f" ({v.error})" if v.error else ""
+        print(f"  req {rid}: {v.status}{err} tokens={list(v.tokens)}")
+    fs = ft_engine.stats
+    print(f"  stats: rejected={fs.rejected} expired={fs.expired} "
+          f"cancelled={fs.cancelled} retries={fs.launch_retries} "
+          f"aborted={fs.aborted}")
 
 
 if __name__ == "__main__":

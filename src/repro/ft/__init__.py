@@ -1,0 +1,16 @@
+"""Fault tolerance: atomic checkpointing and supervised drivers.
+
+Shared by the training loop (``TrainDriver`` auto-restart) and the serving
+engine (``ServeEngine.snapshot``/``restore`` ride on the same atomic
+checkpoint machinery; ``repro.serve.guard.ServeFaultInjector`` extends
+``FaultInjector`` to the serve path).
+"""
+
+from repro.ft.checkpoint import (AsyncCheckpointer, latest_step,
+                                 restore_checkpoint, save_checkpoint)
+from repro.ft.driver import FaultInjector, StragglerWatchdog, TrainDriver
+
+__all__ = [
+    "AsyncCheckpointer", "latest_step", "restore_checkpoint",
+    "save_checkpoint", "FaultInjector", "StragglerWatchdog", "TrainDriver",
+]

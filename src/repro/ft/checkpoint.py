@@ -73,8 +73,14 @@ def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
     """Write state (pytree of jax Arrays) for `step`. Atomic."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    # Sweep stale step_*.tmp dirs left by writers that crashed between the
+    # shard writes and the rename — they are invisible to restore (the
+    # rename never happened) but would otherwise accumulate forever.
+    if os.path.isdir(ckpt_dir):
+        for name in os.listdir(ckpt_dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(ckpt_dir, name),
+                              ignore_errors=True)
     os.makedirs(tmp, exist_ok=True)
 
     manifest = {"step": step, "leaves": {}}

@@ -69,20 +69,35 @@ class StragglerWatchdog:
 
 
 class FaultInjector:
-    """Deterministic fault schedule for tests: raise at given steps."""
+    """Deterministic fault schedule for tests: raise at given steps.
 
-    def __init__(self, fail_at=(), delay_at=(), delay_s: float = 0.0):
+    ``p_fail``/``seed`` layer seeded *random* faults on top of the explicit
+    schedule: each ``maybe_fire`` call draws once from a private
+    ``np.random.default_rng(seed)`` stream, so the same seed reproduces the
+    exact same fault pattern (test-enforced). Each step fires at most once
+    (``fired``), so a restarted run passes the step it died on."""
+
+    def __init__(self, fail_at=(), delay_at=(), delay_s: float = 0.0,
+                 p_fail: float = 0.0, seed: int = 0):
         self.fail_at = set(fail_at)
         self.delay_at = set(delay_at)
         self.delay_s = delay_s
+        self.p_fail = float(p_fail)
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(seed)
         self.fired = set()
 
     def maybe_fire(self, step: int):
         if step in self.delay_at:
             time.sleep(self.delay_s)
-        if step in self.fail_at and step not in self.fired:
+        if step in self.fired:
+            return
+        if step in self.fail_at:
             self.fired.add(step)
             raise RuntimeError(f"injected fault at step {step}")
+        if self.p_fail > 0.0 and self.rng.random() < self.p_fail:
+            self.fired.add(step)
+            raise RuntimeError(f"injected random fault at step {step}")
 
 
 class TrainDriver:

@@ -26,6 +26,7 @@ from repro.launch.specs import build_model
 from repro.nn.module import init_params
 from repro.serve.engine import (Request, SamplingParams, Scheduler,
                                 ServeEngine, WaveEngine)
+from repro.serve.guard import QueueFullError
 
 
 def _parse_buckets(ap: argparse.ArgumentParser, text: str, flag: str):
@@ -52,6 +53,20 @@ def _parse_pos_int(ap: argparse.ArgumentParser, text: str, flag: str,
         ap.error(f"{flag} must be a positive int, got {text!r}")
     if v < 1:
         ap.error(f"{flag} must be a positive int, got {text!r}")
+    return v
+
+
+def _parse_pos_float(ap: argparse.ArgumentParser, text: str, flag: str):
+    """Positive-float flag value (or None when unset); malformed or
+    non-positive input routed through ap.error."""
+    if not text:
+        return None
+    try:
+        v = float(text)
+    except ValueError:
+        ap.error(f"{flag} must be a positive number, got {text!r}")
+    if v <= 0:
+        ap.error(f"{flag} must be a positive number, got {text!r}")
     return v
 
 
@@ -99,6 +114,27 @@ def main():
     ap.add_argument("--prewarm", action="store_true",
                     help="compile every bucket executable before serving "
                          "(continuous engine only)")
+    ap.add_argument("--deadline-ms", default="",
+                    help="per-request TTL in milliseconds: a step-boundary "
+                         "watchdog EXPIREs overdue requests and recycles "
+                         "their slots (continuous engine only)")
+    ap.add_argument("--max-queue", default="",
+                    help="bound the admission queue: submissions at the "
+                         "bound are load-shed per --shed-policy "
+                         "(continuous engine only; default unbounded)")
+    ap.add_argument("--shed-policy", choices=Scheduler.SHED_POLICIES,
+                    default="reject",
+                    help="at the --max-queue bound: 'reject' new work "
+                         "(backpressure) or 'drop-oldest' queued request")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="serve-state snapshot directory: the engine "
+                         "checkpoints its full state (slots, queue, KV "
+                         "cache) every --snapshot-every steps so a "
+                         "replacement engine can resume mid-stream "
+                         "(continuous engine only)")
+    ap.add_argument("--snapshot-every", default="",
+                    help="steps between automatic snapshots (default 8; "
+                         "needs --snapshot-dir)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -122,6 +158,16 @@ def main():
                                      "--prefix-capacity", 256)
     if args.prefix_capacity and not prefix_cache:
         ap.error("--prefix-capacity has no effect without --prefix-cache on")
+    deadline_ms = _parse_pos_float(ap, args.deadline_ms, "--deadline-ms")
+    max_queue = (_parse_pos_int(ap, args.max_queue, "--max-queue", 0)
+                 if args.max_queue else None)
+    snapshot_dir = args.snapshot_dir or None
+    snapshot_every = _parse_pos_int(ap, args.snapshot_every,
+                                    "--snapshot-every", 8)
+    if args.snapshot_every and not snapshot_dir:
+        ap.error("--snapshot-every has no effect without --snapshot-dir")
+    if args.shed_policy != "reject" and max_queue is None:
+        ap.error("--shed-policy has no effect without --max-queue")
     if args.engine == "wave":
         if args.temperature > 0 or args.top_k or args.stop_token:
             ap.error("--engine wave is a greedy-only baseline; "
@@ -133,6 +179,13 @@ def main():
             ap.error("--prompt-buckets/--decode-buckets/--policy/--prewarm/"
                      "--stream/--prefix-cache/--prefix-capacity only apply "
                      "to the continuous engine")
+        if (deadline_ms is not None or max_queue is not None
+                or snapshot_dir or args.snapshot_every
+                or args.shed_policy != "reject"):
+            ap.error("--deadline-ms/--max-queue/--shed-policy/"
+                     "--snapshot-dir/--snapshot-every only apply to the "
+                     "continuous engine (WaveEngine has no request "
+                     "lifecycle)")
         engine = WaveEngine(model, cfg, params, batch=args.batch,
                             cache_len=args.cache_len)
     else:
@@ -143,7 +196,12 @@ def main():
                                  decode_buckets=decode_buckets,
                                  policy=args.policy,
                                  prefix_cache=prefix_cache,
-                                 prefix_capacity=prefix_capacity)
+                                 prefix_capacity=prefix_capacity,
+                                 max_queue=max_queue,
+                                 shed_policy=args.shed_policy,
+                                 snapshot_dir=snapshot_dir,
+                                 snapshot_every=(snapshot_every
+                                                 if snapshot_dir else 0))
         except ValueError as e:
             if "_buckets" in str(e):
                 ap.error(str(e))
@@ -182,21 +240,30 @@ def main():
             max_new=args.max_new,
             stop_tokens=tuple(args.stop_token),
             sampling=sampling,
+            deadline_ms=deadline_ms,
         )
         for i in range(args.n_requests)
     ]
     t0 = time.perf_counter()
     if args.stream:
         # open-ended serving: trickle submissions in while the engine steps,
-        # poll for incremental tokens, then drain the stragglers
+        # poll for incremental tokens, then drain the stragglers. A submit
+        # rejected at the --max-queue bound is backpressure: step the
+        # engine until the queue drains, then retry.
         rids = []
         for i, r in enumerate(reqs):
-            rid = engine.submit(r)
+            while True:
+                try:
+                    rid = engine.submit(r)
+                    break
+                except QueueFullError as e:
+                    print(f"backpressure: {e}")
+                    engine.step()
             rids.append(rid)
             engine.step()
             v = engine.poll(rid)
             print(f"submitted req {rid} (prompt_len={r.prompt_len}); "
-                  f"poll -> done={v.done} tokens={list(v.tokens)}")
+                  f"poll -> status={v.status} tokens={list(v.tokens)}")
         done = engine.drain(rids)
         outs = [done[rid] for rid in rids]
     else:
@@ -215,6 +282,11 @@ def main():
                       f"{engine.stats.prefix_hit_rate:.2f}"
                       f" prefill-tokens-saved="
                       f"{engine.stats.prefill_tokens_saved}")
+        s = engine.stats
+        if s.rejected or s.expired or s.aborted or s.cancelled or s.snapshots:
+            extra += (f" rejected={s.rejected} expired={s.expired}"
+                      f" aborted={s.aborted} cancelled={s.cancelled}"
+                      f" snapshots={s.snapshots}")
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
           f"prefill compiles={engine.prefill_compiles} "
           f"decode compiles={engine.decode_compiles} "

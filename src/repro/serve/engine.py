@@ -116,12 +116,67 @@ them), so bucket padding is invisible to the math: greedy outputs are
 bit-identical across bucket choices, wave sizes, and the B=1 reference loop.
 (Recurrent mixers — mamba/rwkv — carry pad tokens through their state and
 are not pad-invariant; the engine targets attention-family decoders.)
+
+Failure semantics (the robustness layer; see ``repro.serve.guard``)
+-------------------------------------------------------------------
+
+The deployment targets of the paper — FPGAs, mobile/IoT, always-on
+streaming (C-LSTM, arXiv:1803.06305) — make preemption, transient device
+faults, and overload the normal operating regime. The engine's contract:
+
+* **Terminal states** — every submitted request ends in exactly one of
+  ``FINISHED`` (ran to a stop token / ``max_new``), ``FAILED`` (isolated
+  error: launch fault or non-finite logits), ``EXPIRED`` (``deadline_ms``
+  exceeded), or ``CANCELLED`` (``cancel()`` or load shedding).
+  ``poll``/:class:`RequestState` surface the state plus a human-readable
+  ``error`` reason; ``drain`` claims the (possibly partial) tokens of any
+  terminal request.
+
+* **Deadlines** — a request with ``deadline_ms`` set is expired by a
+  step-boundary watchdog (queued or running; the deadline clock starts at
+  ``submit``). Expiry recycles the slot immediately: donor refcounts are
+  always zero at a step boundary, so the slot returns to the free pool
+  with its prefix-index entries intact (a finished/expired slot remains a
+  donor until its rows are overwritten).
+
+* **Error isolation** — every prefill/decode launch is wrapped and the
+  error classified (``guard.classify_error``): faults raised *before* the
+  executable ran leave the donated buffers intact and abort only the
+  implicated requests (decode launches retry once — ``transient``);
+  anything that may have consumed a donated buffer mid-launch is
+  engine-fatal. Non-finite logits are detected by a per-row finiteness
+  flag folded into the existing prefill/decode executables (no new
+  compiles — the compile budget is unchanged, test-enforced): only the
+  poisoned row's request is ``FAILED``, its slot rows are scrubbed back
+  to blank (a masked NaN still contaminates attention through ``0·NaN``),
+  and the rest of the batch continues bit-identically.
+
+* **Load shedding** — ``max_queue`` bounds admission; ``shed_policy``
+  picks between rejecting new work (``QueueFullError`` backpressure — the
+  request is never enqueued) and ``drop-oldest`` (the longest-queued
+  request is ``CANCELLED`` to make room). ``generate`` absorbs
+  backpressure internally (step-and-retry); streaming callers handle
+  ``QueueFullError`` themselves. ``EngineStats`` counts ``rejected``,
+  ``aborted``, ``expired``, ``cancelled``, ``recoveries``.
+
+* **Snapshot/restore** — ``snapshot()`` serializes the complete serving
+  state (slot table, scheduler queue, per-request outputs and RNG states,
+  prefix index, KV cache) through ``ft.checkpoint``'s atomic machinery;
+  ``snapshot_every`` automates it at step boundaries. After an
+  engine-fatal error (``EngineFatalError`` — the engine refuses further
+  work), a *replacement* engine with the same configuration calls
+  ``restore()`` and resumes every in-flight decode mid-stream; decoding
+  is deterministic (greedy argmax or counter-free per-request RNG whose
+  state is captured), so outputs are bit-identical to an uninterrupted
+  run (test-enforced).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import json
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -130,6 +185,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.ft.checkpoint import (latest_step as ckpt_latest_step,
+                                 restore_checkpoint, save_checkpoint)
+from repro.ft.driver import StragglerWatchdog
+from repro.serve.guard import (CANCELLED, EXPIRED, FAILED, FINISHED, QUEUED,
+                               RUNNING, TERMINAL_STATES, EngineFatalError,
+                               QueueFullError, classify_error)
 
 __all__ = [
     "make_prefill_step",
@@ -298,11 +359,16 @@ def _sample_token(logits: np.ndarray, sp: SamplingParams,
 
 @dataclasses.dataclass
 class Request:
+    """``deadline_ms``: wall-clock TTL measured from ``submit`` — the
+    step-boundary watchdog EXPIREs the request (queued or running) once it
+    elapses. ``None`` means no deadline."""
+
     prompt: np.ndarray
     max_new: int = 16
     stop_tokens: Tuple[int, ...] = ()
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         # accept any iterable of token ids but store a tuple, so equality,
@@ -316,11 +382,17 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class RequestState:
-    """``poll`` snapshot: tokens generated so far and completion flag."""
+    """``poll`` snapshot: tokens so far, terminal flag, lifecycle
+    ``status`` (``QUEUED``/``RUNNING``/``FINISHED``/``FAILED``/``EXPIRED``/
+    ``CANCELLED``) and, for failed terminals, the ``error`` reason.
+    ``done`` is True exactly when ``status`` is terminal (``FINISHED`` is
+    the only *successful* terminal)."""
 
     req_id: int
     done: bool
     tokens: Tuple[int, ...]
+    status: str = QUEUED
+    error: Optional[str] = None
 
 
 def _validate_request(r: Request, cache_len: int) -> None:
@@ -330,6 +402,10 @@ def _validate_request(r: Request, cache_len: int) -> None:
         raise ValueError("empty prompt")
     if r.max_new < 1:
         raise ValueError(f"max_new must be >= 1, got {r.max_new}")
+    if r.deadline_ms is not None and r.deadline_ms <= 0:
+        raise ValueError(
+            f"deadline_ms must be > 0 (or None for no deadline), "
+            f"got {r.deadline_ms}")
     if L > cache_len:
         raise ValueError(
             f"prompt length {L} exceeds cache_len={cache_len}: the KV cache "
@@ -392,24 +468,73 @@ class Scheduler:
     land them in one prefill bucket (fewer, fuller launches); FIFO preserves
     arrival order. Per-request outputs are identical under either policy —
     slots are independent — only throughput/latency ordering changes.
+
+    ``max_queue`` bounds the queue depth (load shedding): a ``submit`` at
+    the bound either raises :class:`QueueFullError` (``shed_policy
+    "reject"`` — backpressure, the item is NOT enqueued) or sheds the
+    longest-queued item to make room (``"drop-oldest"``, returned to the
+    caller to finalize). ``None`` (default) keeps the queue unbounded.
     """
 
     POLICIES = ("fifo", "sjf")
+    SHED_POLICIES = ("reject", "drop-oldest")
 
-    def __init__(self, policy: str = "fifo"):
+    def __init__(self, policy: str = "fifo",
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject"):
         if policy not in self.POLICIES:
             raise ValueError(
                 f"unknown scheduler policy {policy!r}; one of {self.POLICIES}"
             )
+        if shed_policy not in self.SHED_POLICIES:
+            raise ValueError(
+                f"unknown shed policy {shed_policy!r}; one of "
+                f"{self.SHED_POLICIES}"
+            )
+        if max_queue is not None and int(max_queue) < 1:
+            raise ValueError(f"max_queue must be >= 1 (or None for "
+                             f"unbounded), got {max_queue}")
         self.policy = policy
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.shed_policy = shed_policy
         self._heap: list = []
         self._seq = 0
         self._front = 0
 
-    def submit(self, item, prompt_len: int) -> None:
+    def submit(self, item, prompt_len: int):
+        """Enqueue; returns the item shed to make room (``drop-oldest`` at
+        the bound) or None. Raises :class:`QueueFullError` at the bound
+        under ``reject``."""
+        dropped = None
+        if self.max_queue is not None and len(self._heap) >= self.max_queue:
+            if self.shed_policy == "reject":
+                raise QueueFullError(len(self._heap), self.max_queue)
+            dropped = self.drop_oldest()
         key = prompt_len if self.policy == "sjf" else 0
         heapq.heappush(self._heap, (key, self._seq, item))
         self._seq += 1
+        return dropped
+
+    def drop_oldest(self):
+        """Remove and return the longest-queued item (smallest sequence
+        number — arrival order, regardless of policy key)."""
+        if not self._heap:
+            raise IndexError("drop_oldest on an empty queue")
+        e = min(self._heap, key=lambda t: t[1])
+        self._heap.remove(e)
+        heapq.heapify(self._heap)
+        return e[2]
+
+    def purge(self, keep) -> int:
+        """Drop every queued item for which ``keep(item)`` is false
+        (stale entries: requests cancelled/expired while queued). Returns
+        the number dropped."""
+        alive = [e for e in self._heap if keep(e[2])]
+        n = len(self._heap) - len(alive)
+        if n:
+            self._heap = alive
+            heapq.heapify(self._heap)
+        return n
 
     def put_front(self, item, prompt_len: int) -> None:
         """Re-enqueue ahead of every same-key item (deferred admissions:
@@ -449,6 +574,14 @@ class EngineStats:
     prefix_lookups: int = 0                # admissions probed against the index
     prefix_hits: int = 0                   # admissions seeded from a donor
     prefill_tokens_saved: int = 0          # Σ matched prefix tokens never rerun
+    rejected: int = 0                      # load-shed submissions (both policies)
+    aborted: int = 0                       # FAILED terminals (isolated errors)
+    expired: int = 0                       # EXPIRED terminals (deadline_ms)
+    cancelled: int = 0                     # CANCELLED terminals (cancel/shed)
+    recoveries: int = 0                    # successful restore() calls
+    snapshots: int = 0                     # snapshot() calls
+    launch_retries: int = 0                # transient decode launches retried
+    slow_steps: int = 0                    # straggler-watchdog flagged steps
     prefill_shapes: Set[Tuple[int, int]] = dataclasses.field(
         default_factory=set)
     decode_shapes: Set[int] = dataclasses.field(default_factory=set)
@@ -542,14 +675,26 @@ class ServeEngine:
                  prefix_cache: bool = False,
                  prefix_block: int = 8,
                  prefix_capacity: int = 256,
-                 donate: bool = True):
+                 donate: bool = True,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0,
+                 fault_injector=None,
+                 clock=time.monotonic):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine supports decoder-LM families; enc-dec serving "
                 "needs an encoder pass per request (use the dryrun cells)"
             )
         _reject_recurrent_mixers(cfg, "bucketed prefill")
-        Scheduler(policy)       # fail fast on unknown policies
+        # fail fast on unknown policies / bad bounds (before param freeze)
+        Scheduler(policy, max_queue=max_queue, shed_policy=shed_policy)
+        if int(snapshot_every) < 0:
+            raise ValueError(
+                f"snapshot_every must be >= 0, got {snapshot_every}")
+        if int(snapshot_every) > 0 and snapshot_dir is None:
+            raise ValueError("snapshot_every needs snapshot_dir")
         if cfg.swm.enabled:
             from repro.kernels.block_circulant.plan import freeze_params
 
@@ -598,12 +743,29 @@ class ServeEngine:
         else:
             self._prefill = jax.jit(self._prefill_fn)
             self._decode = jax.jit(self._decode_fn)
-        # streaming state: queued/running outputs, claimed-on-drain results
-        self._sched = Scheduler(self.policy)
+        # robustness knobs: bounded admission, fault injection hooks,
+        # injectable clock (deadlines/watchdog), snapshot policy
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.shed_policy = shed_policy
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = int(snapshot_every)
+        self.faults = fault_injector
+        self._clock_fn = clock
+        self._watchdog = StragglerWatchdog()
+        self._fatal: Optional[str] = None
+        self._step_count = 0
+        # streaming state: queued/running outputs, claimed-on-drain results,
+        # lifecycle status/error, absolute deadlines, rid -> slot map
+        self._sched = Scheduler(self.policy, max_queue=self.max_queue,
+                                shed_policy=self.shed_policy)
         self._next_rid = 0
         self._req: Dict[int, Request] = {}
         self._out: Dict[int, List[int]] = {}
         self._finished: Dict[int, List[int]] = {}
+        self._status: Dict[int, str] = {}
+        self._error: Dict[int, Optional[str]] = {}
+        self._deadline: Dict[int, float] = {}
+        self._rid_slot: Dict[int, int] = {}
         self._reset_slots()
 
     # -- compile accounting -------------------------------------------------
@@ -638,7 +800,12 @@ class ServeEngine:
         not recomputed, and ``tokens``/``positions`` carry only the
         unmatched tail. A missing match passes the row's own slot with
         ``match_len 0`` (fully-masked seed == fresh rows, bit-identical:
-        masked entries contribute exactly zero to attention)."""
+        masked entries contribute exactly zero to attention).
+
+        Returns ``(last_logits, ok, placed_cache)``: ``ok[j]`` is a
+        device-side per-row finiteness flag (all logits finite) — the
+        error-isolation guard rides in this executable's epilogue instead
+        of costing a separate compile."""
         B = tokens.shape[0]
         if donor_idx is None:
             fresh = self.model.init_cache(B, self.cache_len)
@@ -648,7 +815,9 @@ class ServeEngine:
             params, tokens, positions=positions, cache=fresh,
             logits_mode="last",
         )
-        return logits[:, -1], self._place_cache(cache, filled, slot_idx)
+        last = logits[:, -1]
+        ok = jnp.isfinite(last).all(axis=-1)
+        return last, ok, self._place_cache(cache, filled, slot_idx)
 
     def _seed_cache(self, cache, donor_idx, match_len):
         """Bucket-shaped cache seeded from donor slot rows: entries at
@@ -676,10 +845,15 @@ class ServeEngine:
         sub-batch, decode one token there, then scatter the updated rows
         back into the persistent slot cache. ``tokens (Bb, 1)``, ``pos
         (Bb,)``, ``slot_idx (Bb,)`` — a pure permutation of rows, so the
-        per-slot math is identical to full-slot decode."""
+        per-slot math is identical to full-slot decode.
+
+        Returns ``(logits, ok, placed_cache)`` — ``ok`` is the same
+        per-row finiteness flag as ``_prefill_and_place`` (no extra
+        executable)."""
         sub = self._gather_cache(cache, slot_idx)
         logits, new_sub = self.model.decode_step(params, tokens, sub, pos)
-        return logits, self._place_cache(cache, new_sub, slot_idx)
+        ok = jnp.isfinite(logits).all(axis=-1)
+        return logits, ok, self._place_cache(cache, new_sub, slot_idx)
 
     def _gather_cache(self, src, idx):
         """Gather slot rows into a sub-batch cache (inverse of
@@ -784,28 +958,94 @@ class ServeEngine:
     def _validate(self, r: Request) -> None:
         _validate_request(r, self.cache_len)
 
-    def _finish(self, slot: int) -> None:
-        rid = self._slot_req[slot]
-        self._finished[rid] = self._out.pop(rid)
+    # -- lifecycle ----------------------------------------------------------
+    def _check_alive(self) -> None:
+        if self._fatal is not None:
+            raise EngineFatalError(
+                f"engine is dead ({self._fatal}); build a replacement "
+                f"engine and restore() its latest snapshot"
+            )
+
+    def _die(self, e: BaseException) -> None:
+        """Engine-fatal error: a launch may have consumed its donated cache
+        buffer partway, so no device state can be trusted. Mark the engine
+        dead (every subsequent submit/step refuses) and raise."""
+        self._fatal = f"{type(e).__name__}: {e}"
+        raise EngineFatalError(
+            f"engine-fatal serving error ({self._fatal}): donated device "
+            f"buffers cannot be trusted after a mid-launch failure — the "
+            f"engine is dead; build a replacement engine and restore() its "
+            f"latest snapshot"
+        ) from e
+
+    def _scrub_slot(self, slot: int) -> None:
+        """Overwrite a slot's cache rows with blank (fresh) rows. Needed
+        after a non-finite launch row: NaN k/v entries contaminate any
+        later read through attention even when masked (``0 · NaN = NaN``),
+        including the no-match self-donor seed of the next prefill."""
+        blank = self.model.init_cache(1, self.cache_len)
+        idx = jnp.asarray([slot], jnp.int32)
+        self.cache = self._place_cache(self.cache, blank, idx)
+
+    def _finalize(self, rid: int, status: str,
+                  error: Optional[str] = None, *,
+                  scrub: bool = False) -> None:
+        """Move a request to a terminal state. Frees its slot if admitted
+        (donor refcounts are zero whenever this runs — step boundaries and
+        post-launch paths only), keeps the slot's prefix-index entries
+        unless ``scrub`` (non-finite rows: drop from the index AND blank
+        the rows), and bumps the matching stats counter. The (possibly
+        partial) tokens stay claimable via ``drain``."""
+        assert status in TERMINAL_STATES, status
+        slot = self._rid_slot.pop(rid, None)
+        if slot is not None:
+            self._active[slot] = False
+            self._slot_req[slot] = None
+            self._slot_rng[slot] = None
+            if scrub:
+                self._index_drop_slot(slot)
+                self._scrub_slot(slot)
+        self._finished[rid] = self._out.pop(rid, [])
         self._req.pop(rid, None)
-        self._active[slot] = False
-        self._slot_req[slot] = None
-        self._slot_rng[slot] = None
-        self.stats.requests_completed += 1
+        self._deadline.pop(rid, None)
+        self._status[rid] = status
+        self._error[rid] = error
+        if status == FINISHED:
+            self.stats.requests_completed += 1
+        elif status == FAILED:
+            self.stats.aborted += 1
+        elif status == EXPIRED:
+            self.stats.expired += 1
+        elif status == CANCELLED:
+            self.stats.cancelled += 1
+
+    def _expire_overdue(self) -> None:
+        """Step-boundary deadline watchdog: EXPIRE every request (queued or
+        running) whose ``deadline_ms`` has elapsed. Runs at step boundaries
+        only, where donor refcounts are all zero — slot recycling is always
+        safe and the slot's prefix-index entries stay valid."""
+        if not self._deadline:
+            return
+        now = self._clock_fn()
+        for rid in [r for r, t in self._deadline.items() if now >= t]:
+            r = self._req.get(rid)
+            ms = None if r is None else r.deadline_ms
+            self._finalize(rid, EXPIRED,
+                           f"deadline_ms={ms} exceeded at step boundary")
 
     def _push_token(self, slot: int, logits_row: np.ndarray) -> None:
         rid = self._slot_req[slot]
         r = self._req[rid]
         tok = _sample_token(logits_row, r.sampling, self._slot_rng[slot])
         if r.stop_tokens and tok in r.stop_tokens:
-            self._finish(slot)
+            self._finalize(rid, FINISHED)
             return
         self._out[rid].append(tok)
         self.stats.tokens_generated += 1
         self._slot_last[slot] = tok
         self._slot_left[slot] -= 1
         if self._slot_left[slot] <= 0:
-            self._finish(slot)
+            self._finalize(rid, FINISHED)
 
     # -- admission ----------------------------------------------------------
     def _resolve_placement(self, rids: List[int],
@@ -874,10 +1114,19 @@ class ServeEngine:
 
     def _admit(self) -> None:
         free = [i for i in range(self.batch) if not self._active[i]]
-        n = min(len(free), len(self._sched))
-        if n == 0:
+        if not free:
             return
-        rids = self._sched.take(n)
+        # take from the queue, lazily skipping stale entries (requests
+        # cancelled / expired / shed while still queued stay in the heap
+        # until taken here — O(1) amortized instead of eager heap surgery)
+        rids: List[int] = []
+        while len(rids) < len(free) and len(self._sched):
+            for rid in self._sched.take(len(free) - len(rids)):
+                if rid in self._finished:
+                    continue
+                rids.append(rid)
+        if not rids:
+            return
         # prefix matching against the RESIDENT index (donors placed in
         # earlier rounds — active or finished-but-unreclaimed slots); a
         # matched donor is pinned until the launch that copies it has run
@@ -948,7 +1197,25 @@ class ServeEngine:
                         jnp.asarray(np.asarray(slots, np.int32)))
                 if self.prefix_cache:
                     args += (jnp.asarray(donor_idx), jnp.asarray(mlen))
-                logits, self.cache = self._prefill(*args)
+                try:
+                    if self.faults is not None:
+                        self.faults.on_launch("prefill",
+                                              self.stats.prefill_calls)
+                    logits, ok, self.cache = self._prefill(*args)
+                except BaseException as e:
+                    if classify_error(e) != "request":
+                        self._die(e)
+                    # transient fault BEFORE the executable ran: buffers
+                    # intact, slot rows untouched (still free, already out
+                    # of the prefix index). Release this chunk's donor pins
+                    # and FAIL only its requests; later chunks continue.
+                    for rid in chunk:
+                        donor, _ = match[rid]
+                        if donor is not None and rid not in self_place:
+                            self._slot_refs[donor] -= 1
+                        self._finalize(rid, FAILED,
+                                       f"prefill launch failed: {e}")
+                    continue
                 # copies landed: release this chunk's donor pins
                 # (self-placed consumers already released theirs)
                 for rid in chunk:
@@ -958,10 +1225,22 @@ class ServeEngine:
                 self.stats.prefill_calls += 1
                 self.stats.prefill_shapes.add((Bb, Sb))
                 lg = np.asarray(logits)
+                okh = np.asarray(ok)
                 for j, (slot, rid) in enumerate(zip(slots, chunk)):
+                    if not okh[j]:
+                        # poisoned row: its NaN k/v already landed in the
+                        # slot — scrub back to blank rows (a masked NaN
+                        # still reaches attention via 0·NaN) and never
+                        # index/activate. Other rows are unaffected.
+                        self._scrub_slot(slot)
+                        self._finalize(rid, FAILED,
+                                       "non-finite logits in prefill "
+                                       "(request aborted; batch continues)")
+                        continue
                     r = self._req[rid]
                     self._index_insert(slot, prompts[j])
                     self._slot_req[slot] = rid
+                    self._rid_slot[rid] = slot
                     self._slot_rng[slot] = r.sampling.make_rng()
                     self._slot_pos[slot] = r.prompt_len
                     self._slot_left[slot] = r.max_new
@@ -1000,18 +1279,46 @@ class ServeEngine:
             else:
                 idx = np.concatenate([act, free[: Bb - n]])
         idx = idx.astype(np.int32)
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self._slot_last[idx][:, None]),
-            self.cache, jnp.asarray(self._slot_pos[idx]), jnp.asarray(idx),
-        )
+        # wrapped launch with ONE retry for transient (pre-launch) faults:
+        # the injector's fired-set guarantees a scheduled fault does not
+        # refire, so the retry runs the same launch with intact buffers. A
+        # second failure — or any error that may have consumed the donated
+        # cache mid-execution — is engine-fatal (snapshot/restore path).
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.on_launch("decode", self.stats.decode_steps)
+                logits, ok, self.cache = self._decode(
+                    self.params, jnp.asarray(self._slot_last[idx][:, None]),
+                    self.cache, jnp.asarray(self._slot_pos[idx]),
+                    jnp.asarray(idx),
+                )
+                break
+            except BaseException as e:
+                if classify_error(e) != "request" or attempt >= 1:
+                    self._die(e)
+                attempt += 1
+                self.stats.launch_retries += 1
         self.stats.decode_steps += 1
         self.stats.slot_steps_active += int(n)
         self.stats.decode_rows += int(Bb)
         self.stats.decode_shapes.add(int(Bb))
         self._slot_pos[act] += 1
         lg = np.asarray(logits)
+        okh = np.asarray(ok)
         for j, slot in enumerate(act):
-            self._push_token(int(slot), lg[j])
+            slot = int(slot)
+            if not okh[j]:
+                # poisoned row: abort just this request; scrub its rows
+                # (NaN k/v reach attention even masked) and drop it from
+                # the prefix index. All other rows continue unaffected.
+                self._finalize(self._slot_req[slot], FAILED,
+                               "non-finite logits in decode "
+                               "(request aborted; batch continues)",
+                               scrub=True)
+                continue
+            self._push_token(slot, lg[j])
 
     def prewarm(self) -> int:
         """Compile every (batch-bucket, prompt-bucket) prefill executable
@@ -1030,6 +1337,7 @@ class ServeEngine:
         active slots) and flushes the prefix index (resident donor rows in
         free slots take pad writes).
         """
+        self._check_alive()
         if self._active.any():
             raise RuntimeError(
                 "prewarm() requires an idle engine: warm-up launches commit "
@@ -1051,12 +1359,12 @@ class ServeEngine:
                     # self-donor with match 0: fully-masked seed, same
                     # calling convention (and executable) as real traffic
                     args += (slots, jnp.zeros((Bb,), jnp.int32))
-                _, self.cache = self._prefill(*args)
+                _, _, self.cache = self._prefill(*args)
         for Bb in self.decode_buckets:
             # probe at position -1: the ring write lands with a negative
             # stored position (masked), so committing the returned cache
             # leaves the math untouched
-            _, self.cache = self._decode(
+            _, _, self.cache = self._decode(
                 self.params, jnp.zeros((Bb, 1), jnp.int32), self.cache,
                 -jnp.ones((Bb,), jnp.int32),
                 jnp.arange(Bb, dtype=jnp.int32),
@@ -1067,31 +1375,86 @@ class ServeEngine:
     def submit(self, request: Request) -> int:
         """Enqueue one request for service; returns its request id. The
         request is admitted to a cache slot by a later ``step()`` (or
-        ``drain``/``generate``) as slots free up."""
+        ``drain``/``generate``) as slots free up.
+
+        With ``max_queue`` set, a submit at the bound either raises
+        :class:`QueueFullError` (``shed_policy="reject"`` — nothing is
+        enqueued, ``stats.rejected`` counts it; retry after draining) or
+        sheds the longest-queued request as CANCELLED
+        (``"drop-oldest"``). The deadline clock starts now."""
+        self._check_alive()
         self._validate(request)
+        if self._sched.max_queue is not None:
+            # stale heap entries (cancelled/expired while queued) must not
+            # count against the bound
+            self._sched.purge(lambda rid: rid not in self._finished)
         rid = self._next_rid
+        try:
+            dropped = self._sched.submit(rid, request.prompt_len)
+        except QueueFullError:
+            self.stats.rejected += 1
+            raise
         self._next_rid += 1
         self._req[rid] = request
         self._out[rid] = []
-        self._sched.submit(rid, request.prompt_len)
+        if request.deadline_ms is not None:
+            self._deadline[rid] = (self._clock_fn()
+                                   + request.deadline_ms / 1000.0)
+        if dropped is not None:
+            self.stats.rejected += 1
+            self._finalize(dropped, CANCELLED,
+                           "load shed (drop-oldest): queue at max_queue="
+                           f"{self._sched.max_queue}")
         return rid
 
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a queued or running request: its slot (if any) is
+        recycled and its partial tokens stay claimable via ``drain``.
+        Returns True if this call cancelled it, False if it was already
+        terminal; raises ``KeyError`` for unknown/claimed ids."""
+        if req_id in self._finished:
+            return False
+        if req_id not in self._out:
+            raise KeyError(f"unknown or already-claimed request id {req_id}")
+        self._finalize(req_id, CANCELLED, "cancelled by caller")
+        return True
+
     def step(self) -> bool:
-        """Advance the engine one round: admit queued requests into free
-        slots (bucketed prefill) and run one compacted decode step. Returns
-        True while work remains (active slots or queued requests)."""
+        """Advance the engine one round: expire overdue deadlines (step-
+        boundary watchdog), admit queued requests into free slots (bucketed
+        prefill), and run one compacted decode step. Auto-snapshots every
+        ``snapshot_every`` steps. Returns True while work remains (active
+        slots or queued requests). Raises :class:`EngineFatalError` (and
+        marks the engine dead) on unrecoverable launch errors."""
+        self._check_alive()
+        t0 = self._clock_fn()
+        if self.faults is not None:
+            self.faults.on_step(self._step_count)
+        self._expire_overdue()
         self._admit()
         self._decode_step()
+        self._step_count += 1
+        if self._watchdog.observe(self._step_count,
+                                  self._clock_fn() - t0) != "ok":
+            self.stats.slow_steps += 1
+        if (self.snapshot_dir is not None and self.snapshot_every > 0
+                and self._step_count % self.snapshot_every == 0):
+            self.snapshot()
         return bool(self._active.any() or len(self._sched))
 
     def poll(self, req_id: int) -> RequestState:
         """Snapshot a submitted request's progress without consuming it:
-        tokens generated so far and whether it finished. Raises ``KeyError``
-        for unknown or already-claimed (drained) request ids."""
+        tokens generated so far, lifecycle ``status``, and the ``error``
+        reason for failed terminals. Raises ``KeyError`` for unknown or
+        already-claimed (drained) request ids."""
         if req_id in self._finished:
-            return RequestState(req_id, True, tuple(self._finished[req_id]))
+            return RequestState(req_id, True, tuple(self._finished[req_id]),
+                                self._status.get(req_id, FINISHED),
+                                self._error.get(req_id))
         if req_id in self._out:
-            return RequestState(req_id, False, tuple(self._out[req_id]))
+            status = RUNNING if req_id in self._rid_slot else QUEUED
+            return RequestState(req_id, False, tuple(self._out[req_id]),
+                                status, None)
         raise KeyError(
             f"unknown or already-claimed request id {req_id}"
         )
@@ -1099,9 +1462,11 @@ class ServeEngine:
     def drain(self, req_ids: Optional[Sequence[int]] = None
               ) -> Dict[int, List[int]]:
         """Run ``step()`` until the engine is idle, then claim finished
-        outputs: the requested ids (default: every unclaimed finished
+        outputs: the requested ids (default: every unclaimed terminal
         request) are removed from the engine and returned as
-        ``{req_id: tokens}``. Unlisted finished requests stay pollable."""
+        ``{req_id: tokens}`` — partial tokens for FAILED/EXPIRED/CANCELLED
+        terminals (``poll`` first for the status). Unlisted terminal
+        requests stay pollable."""
         while self.step():
             pass
         if req_ids is None:
@@ -1116,7 +1481,12 @@ class ServeEngine:
                 raise KeyError(
                     f"request id {rid} is not a finished unclaimed request"
                 )
-        return {rid: self._finished.pop(rid) for rid in rids}
+        out = {}
+        for rid in rids:
+            out[rid] = self._finished.pop(rid)
+            self._status.pop(rid, None)
+            self._error.pop(rid, None)
+        return out
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Serve a list of requests; returns per-request tokens, in request
@@ -1124,14 +1494,234 @@ class ServeEngine:
         idle, claim this call's outputs (earlier ``submit``-ed requests also
         run to completion but stay pollable/claimable). Admission
         interleaves with decoding: slots refill as soon as their request
-        finishes (continuous batching)."""
+        finishes (continuous batching).
+
+        Backpressure is absorbed internally: a submit rejected at the
+        ``max_queue`` bound steps the engine (freeing queue space) and
+        retries — the loop always terminates because every queued request
+        has a finite budget. Under ``drop-oldest``, shed requests of this
+        call return their (possibly empty) partial tokens."""
         # validate the whole batch before submitting any of it: a bad
         # request must not leave its predecessors enqueued as ghost work
         for r in requests:
             self._validate(r)
-        rids = [self.submit(r) for r in requests]
+        rids = []
+        for r in requests:
+            while True:
+                try:
+                    rids.append(self.submit(r))
+                    break
+                except QueueFullError:
+                    self.step()
         done = self.drain(rids)
         return [done[rid] for rid in rids]
+
+    # -- snapshot / restore -------------------------------------------------
+    _STAT_FIELDS = (
+        "prefill_calls", "decode_steps", "tokens_generated",
+        "requests_completed", "padded_prompt_tokens", "slot_steps_active",
+        "decode_rows", "prefix_lookups", "prefix_hits",
+        "prefill_tokens_saved", "rejected", "aborted", "expired",
+        "cancelled", "recoveries", "snapshots", "launch_retries",
+        "slow_steps",
+    )
+
+    def _fingerprint(self) -> Dict[str, object]:
+        """Configuration identity a snapshot is only valid against."""
+        return {
+            "batch": self.batch, "cache_len": self.cache_len,
+            "policy": self.policy,
+            "prompt_buckets": list(self.prompt_buckets),
+            "decode_buckets": list(self.decode_buckets),
+            "prefix_cache": self.prefix_cache,
+            "prefix_block": self.prefix_block,
+            "prefix_capacity": self.prefix_capacity,
+            "vocab": int(self.cfg.vocab),
+            "max_queue": self.max_queue,
+            "shed_policy": self.shed_policy,
+        }
+
+    def snapshot(self) -> str:
+        """Serialize the COMPLETE serving state — KV cache, slot table,
+        scheduler queue, per-request outputs and RNG states, prefix index,
+        deadlines (as remaining budget), stats — through ``ft.checkpoint``'s
+        atomic tmp+rename machinery. A replacement engine with the same
+        configuration ``restore()``s it and resumes every in-flight decode
+        mid-stream; decoding is deterministic, so greedy outputs are
+        bit-identical to an uninterrupted run. Returns the checkpoint path.
+
+        Runs at step boundaries only (``step()`` auto-snapshots via
+        ``snapshot_every``); donor refcounts are zero there, so the state
+        is closed under restore."""
+        self._check_alive()
+        if self.snapshot_dir is None:
+            raise ValueError("snapshot() needs snapshot_dir")
+        assert (self._slot_refs == 0).all(), \
+            "snapshot mid-admission: donor rows are pinned"
+        now = self._clock_fn()
+        meta = {
+            "version": 1,
+            "fingerprint": self._fingerprint(),
+            "step_count": self._step_count,
+            "next_rid": self._next_rid,
+            "prefix_clock": self._clock,
+            "requests": [
+                [rid, {
+                    "prompt": np.asarray(r.prompt, np.int32)
+                    .reshape(-1).tolist(),
+                    "max_new": int(r.max_new),
+                    "stop_tokens": list(r.stop_tokens),
+                    "sampling": {
+                        "temperature": float(r.sampling.temperature),
+                        "top_k": int(r.sampling.top_k),
+                        "seed": int(r.sampling.seed)},
+                    "deadline_ms": r.deadline_ms,
+                }] for rid, r in self._req.items()],
+            "out": [[rid, list(t)] for rid, t in self._out.items()],
+            "finished": [[rid, list(t), self._status.get(rid, FINISHED),
+                          self._error.get(rid)]
+                         for rid, t in self._finished.items()],
+            "deadline_remaining_s": [[rid, max(0.0, t - now)]
+                                     for rid, t in self._deadline.items()],
+            "sched": {"heap": [[int(k), int(s), int(item)]
+                               for (k, s, item) in self._sched._heap],
+                      "seq": int(self._sched._seq),
+                      "front": int(self._sched._front)},
+            "rid_slot": [[rid, int(s)] for rid, s in self._rid_slot.items()],
+            "slots": {
+                "active": [bool(x) for x in self._active],
+                "req": [None if x is None else int(x)
+                        for x in self._slot_req],
+                "pos": [int(x) for x in self._slot_pos],
+                "last": [int(x) for x in self._slot_last],
+                "left": [int(x) for x in self._slot_left],
+                "touch": [int(x) for x in self._slot_touch],
+                "prompt": [None if p is None else p.tolist()
+                           for p in self._slot_prompt],
+                "rng": [None if g is None else g.bit_generator.state
+                        for g in self._slot_rng],
+            },
+            "prefix_index": [[int(m), raw.hex(), int(slot)]
+                             for (m, raw), slot in
+                             self._prefix_index.items()],
+            "stats": {f: int(getattr(self.stats, f))
+                      for f in self._STAT_FIELDS},
+            "stats_shapes": {
+                "prefill": sorted([int(b), int(s)]
+                                  for b, s in self.stats.prefill_shapes),
+                "decode": sorted(int(b)
+                                 for b in self.stats.decode_shapes)},
+        }
+        state = {
+            "cache": {f"g{i:03d}": g for i, g in enumerate(self.cache)},
+            "meta": np.frombuffer(json.dumps(meta).encode("utf-8"),
+                                  np.uint8),
+        }
+        path = save_checkpoint(self.snapshot_dir, self._step_count, state)
+        self.stats.snapshots += 1
+        return path
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Load a snapshot into THIS engine (which must be fresh and idle —
+        the replacement for a dead one, built with the same configuration)
+        and resume serving exactly where the snapshot left off. Defaults to
+        the latest snapshot in ``snapshot_dir``. Deadlines resume with the
+        remaining budget they had at snapshot time. Returns the restored
+        step count; ``stats.recoveries`` counts successful restores."""
+        self._check_alive()
+        if self.snapshot_dir is None:
+            raise ValueError("restore() needs snapshot_dir")
+        if self._active.any() or len(self._sched) or self._req \
+                or self._finished:
+            raise RuntimeError(
+                "restore() needs a fresh idle engine (no queued, active, "
+                "or unclaimed requests): build a replacement engine with "
+                "the same configuration and restore into that"
+            )
+        if step is None:
+            step = ckpt_latest_step(self.snapshot_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no snapshot found in {self.snapshot_dir}")
+        state = restore_checkpoint(self.snapshot_dir, int(step))
+        meta = json.loads(bytes(np.asarray(state["meta"])).decode("utf-8"))
+        fp = self._fingerprint()
+        if meta["fingerprint"] != fp:
+            raise ValueError(
+                f"snapshot fingerprint mismatch: saved "
+                f"{meta['fingerprint']} vs this engine {fp} — restore "
+                f"needs an identically-configured engine"
+            )
+        groups = state["cache"]
+        cache = [groups[f"g{i:03d}"] for i in range(len(self._repeat_axes))]
+        # cast through the template so cache dtypes match exactly (the
+        # checkpoint round-trips bf16 through f32 files)
+        tmpl = self.model.init_cache(self.batch, self.cache_len)
+        self.cache = jax.tree.map(
+            lambda t, x: jnp.asarray(x, t.dtype), tmpl, cache)
+        self._step_count = int(meta["step_count"])
+        self._next_rid = int(meta["next_rid"])
+        self._clock = int(meta["prefix_clock"])
+        self._req = {
+            int(rid): Request(
+                prompt=np.asarray(d["prompt"], np.int32),
+                max_new=int(d["max_new"]),
+                stop_tokens=tuple(d["stop_tokens"]),
+                sampling=SamplingParams(
+                    temperature=float(d["sampling"]["temperature"]),
+                    top_k=int(d["sampling"]["top_k"]),
+                    seed=int(d["sampling"]["seed"])),
+                deadline_ms=d["deadline_ms"],
+            ) for rid, d in meta["requests"]}
+        self._out = {int(rid): [int(t) for t in toks]
+                     for rid, toks in meta["out"]}
+        self._finished, self._status, self._error = {}, {}, {}
+        for rid, toks, status, err in meta["finished"]:
+            self._finished[int(rid)] = [int(t) for t in toks]
+            self._status[int(rid)] = status
+            self._error[int(rid)] = err
+        now = self._clock_fn()
+        self._deadline = {int(rid): now + float(rem)
+                          for rid, rem in meta["deadline_remaining_s"]}
+        sc = meta["sched"]
+        self._sched = Scheduler(self.policy, max_queue=self.max_queue,
+                                shed_policy=self.shed_policy)
+        self._sched._heap = [(int(k), int(s), int(rid))
+                             for k, s, rid in sc["heap"]]
+        heapq.heapify(self._sched._heap)
+        self._sched._seq = int(sc["seq"])
+        self._sched._front = int(sc["front"])
+        self._rid_slot = {int(rid): int(s) for rid, s in meta["rid_slot"]}
+        sl = meta["slots"]
+        self._active = np.asarray(sl["active"], bool)
+        self._slot_req = [None if x is None else int(x) for x in sl["req"]]
+        self._slot_pos = np.asarray(sl["pos"], np.int32)
+        self._slot_last = np.asarray(sl["last"], np.int32)
+        self._slot_left = np.asarray(sl["left"], np.int64)
+        self._slot_touch = np.asarray(sl["touch"], np.int64)
+        self._slot_prompt = [None if p is None else np.asarray(p, np.int32)
+                             for p in sl["prompt"]]
+        self._slot_rng = []
+        for st in sl["rng"]:
+            if st is None:
+                self._slot_rng.append(None)
+            else:
+                g = np.random.default_rng(0)
+                g.bit_generator.state = st
+                self._slot_rng.append(g)
+        self._slot_refs = np.zeros(self.batch, np.int64)
+        self._prefix_index = OrderedDict(
+            ((int(m), bytes.fromhex(raw)), int(slot))
+            for m, raw, slot in meta["prefix_index"])
+        st = meta["stats"]
+        for f in self._STAT_FIELDS:
+            setattr(self.stats, f, int(st.get(f, 0)))
+        self.stats.prefill_shapes = {
+            (int(b), int(s)) for b, s in meta["stats_shapes"]["prefill"]}
+        self.stats.decode_shapes = {
+            int(b) for b in meta["stats_shapes"]["decode"]}
+        self.stats.recoveries += 1
+        return int(step)
 
 
 # ---------------------------------------------------------------------------
@@ -1183,6 +1773,11 @@ class WaveEngine:
                 raise ValueError(
                     "WaveEngine is a greedy-only baseline: per-request "
                     "sampling and stop tokens need ServeEngine"
+                )
+            if r.deadline_ms is not None:
+                raise ValueError(
+                    "WaveEngine has no request lifecycle: deadlines, "
+                    "cancellation, and load shedding need ServeEngine"
                 )
         results: List[List[int]] = []
         for i in range(0, len(requests), self.batch):

@@ -1,0 +1,209 @@
+"""Serving fault-tolerance primitives: request lifecycle states, error
+classification, load-shedding backpressure, and the serve-path chaos
+injector.
+
+The engine (``repro.serve.engine``) is the paper's always-on streaming
+deployment target (FPGA/IoT inference, C-LSTM's continuous ASR argument,
+arXiv:1803.06305): preemption, transient device faults, and overload are
+the *normal* operating regime, not exceptions. This module holds the
+pieces of the robustness layer that are independent of the engine itself:
+
+* **Lifecycle states** — every request ends in exactly one terminal state
+  (:data:`TERMINAL_STATES`); ``FINISHED`` is the only success. The engine's
+  ``poll`` surfaces the state plus a human-readable ``error`` reason.
+* **Error classification** — :func:`classify_error` splits launch
+  exceptions into ``"request"`` (raised *before* the executable ran, so
+  the donated cache buffers are still valid: abort only the implicated
+  requests and keep serving) and ``"fatal"`` (anything that may have
+  fired a donated executable partway: the cache handle cannot be
+  trusted, the engine must die and a replacement restores a snapshot).
+* **Backpressure** — :class:`QueueFullError` is the reject-new shedding
+  signal: it carries the queue depth so callers can back off.
+* **Chaos** — :class:`ServeFaultInjector` extends the training-side
+  :class:`repro.ft.driver.FaultInjector` with serve-path hooks (per-kind
+  launch schedules, an engine-fatal schedule, artificial step delays,
+  seeded random faults) so the chaos suite can drive every failure path
+  deterministically. :class:`ManualClock` makes deadline expiry testable
+  without wall-clock sleeps.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable, Optional, Set, Tuple
+
+from repro.ft.driver import FaultInjector
+
+__all__ = [
+    "QUEUED", "RUNNING", "FINISHED", "FAILED", "EXPIRED", "CANCELLED",
+    "TERMINAL_STATES",
+    "QueueFullError", "EngineFatalError", "InjectedFault",
+    "InjectedEngineFatal",
+    "classify_error",
+    "ManualClock",
+    "ServeFaultInjector",
+]
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle states
+# ---------------------------------------------------------------------------
+
+QUEUED = "QUEUED"          # submitted, waiting for a slot
+RUNNING = "RUNNING"        # admitted to a cache slot, decoding
+FINISHED = "FINISHED"      # terminal: ran to stop token / max_new
+FAILED = "FAILED"          # terminal: isolated error (launch fault, NaN)
+EXPIRED = "EXPIRED"        # terminal: deadline_ms exceeded
+CANCELLED = "CANCELLED"    # terminal: cancel() or load shedding
+
+TERMINAL_STATES = frozenset((FINISHED, FAILED, EXPIRED, CANCELLED))
+
+
+# ---------------------------------------------------------------------------
+# Errors
+# ---------------------------------------------------------------------------
+
+
+class QueueFullError(RuntimeError):
+    """Reject-new load shedding: the admission queue is at ``max_queue``.
+
+    Backpressure signal — the request was NOT enqueued; the caller should
+    retry after draining (``depth``/``max_queue`` say how far over)."""
+
+    def __init__(self, depth: int, max_queue: int):
+        self.depth = int(depth)
+        self.max_queue = int(max_queue)
+        super().__init__(
+            f"admission queue full ({depth} queued, max_queue={max_queue}); "
+            f"request rejected — retry after the engine drains (backpressure)"
+        )
+
+
+class EngineFatalError(RuntimeError):
+    """The engine hit an unrecoverable serving error (a launch may have
+    consumed its donated cache buffer partway). The engine is dead; build a
+    replacement engine and ``restore()`` its latest snapshot."""
+
+
+class InjectedFault(RuntimeError):
+    """Chaos-injected *transient* launch failure. Raised BEFORE the
+    executable runs, so donated buffers are intact — classified
+    ``"request"`` (isolate, keep serving)."""
+
+
+class InjectedEngineFatal(RuntimeError):
+    """Chaos-injected engine-fatal fault — classified ``"fatal"``
+    (kill the engine, recover via snapshot/restore)."""
+
+
+def classify_error(e: BaseException) -> str:
+    """``"request"`` | ``"fatal"`` for an exception raised around a
+    prefill/decode launch.
+
+    Only faults known to fire *before* the executable consumed its donated
+    buffers (:class:`InjectedFault`) are request-isolatable; everything
+    else — device errors, XLA runtime errors, injected fatals — may have
+    invalidated the in-place cache and is engine-fatal."""
+    return "request" if isinstance(e, InjectedFault) else "fatal"
+
+
+# ---------------------------------------------------------------------------
+# Deterministic clock (deadline tests / chaos without wall-clock sleeps)
+# ---------------------------------------------------------------------------
+
+
+class ManualClock:
+    """Injectable monotonic clock: ``clock()`` reads, ``advance()`` moves.
+
+    The engine takes any zero-arg callable returning seconds
+    (``time.monotonic`` by default); tests and the chaos harness pass a
+    ManualClock so deadline expiry and step-delay injection are exact and
+    instant instead of sleep-based."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self.t += float(dt)
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Serve-path chaos injector
+# ---------------------------------------------------------------------------
+
+
+class ServeFaultInjector(FaultInjector):
+    """Deterministic fault schedule for the serving path.
+
+    Extends the training-side :class:`FaultInjector` (which keys faults by
+    train step) with serve-shaped hooks:
+
+    * ``fail_prefill_at`` / ``fail_decode_at`` — successful-launch indices
+      (the engine's ``stats.prefill_calls`` / ``stats.decode_steps`` at
+      attempt time) at which :meth:`on_launch` raises a *transient*
+      :class:`InjectedFault`. Each scheduled index fires at most once, so
+      a retried decode launch succeeds on the second attempt.
+    * ``fatal_decode_at`` — decode launch indices raising
+      :class:`InjectedEngineFatal` (snapshot/restore recovery path).
+    * ``delay_at`` / ``delay_s`` — engine step indices at which
+      :meth:`on_step` injects an artificial stall: advancing the supplied
+      ``clock`` (a :class:`ManualClock`) when given, else sleeping.
+    * ``p_fail`` / ``seed`` — seeded random transient launch failures on
+      top of the explicit schedule; the same seed reproduces the same
+      fault pattern exactly (test-enforced).
+    """
+
+    def __init__(self, fail_prefill_at: Iterable[int] = (),
+                 fail_decode_at: Iterable[int] = (),
+                 fatal_decode_at: Iterable[int] = (),
+                 delay_at: Iterable[int] = (), delay_s: float = 0.0,
+                 p_fail: float = 0.0, seed: int = 0,
+                 clock: Optional[ManualClock] = None):
+        super().__init__(fail_at=(), delay_at=delay_at, delay_s=delay_s,
+                         p_fail=p_fail, seed=seed)
+        self.fail_prefill_at = set(int(i) for i in fail_prefill_at)
+        self.fail_decode_at = set(int(i) for i in fail_decode_at)
+        self.fatal_decode_at = set(int(i) for i in fatal_decode_at)
+        self.clock = clock
+        self.launch_log: list = []      # (kind, index, action) audit trail
+
+    # -- engine hooks -------------------------------------------------------
+    def on_step(self, step: int) -> None:
+        """Called at each engine step boundary: artificial step delays."""
+        if step in self.delay_at:
+            if self.clock is not None:
+                self.clock.advance(self.delay_s)
+            else:
+                time.sleep(self.delay_s)
+
+    def on_launch(self, kind: str, index: int) -> None:
+        """Called immediately BEFORE each prefill/decode launch (donated
+        buffers still intact). Raises the scheduled fault, once per
+        scheduled (kind, index)."""
+        key: Tuple[str, int] = (kind, int(index))
+        if key in self.fired:
+            return
+        if kind == "decode" and index in self.fatal_decode_at:
+            self.fired.add(key)
+            self.launch_log.append((kind, index, "fatal"))
+            raise InjectedEngineFatal(
+                f"injected engine-fatal fault at decode launch {index}")
+        sched: Set[int] = (self.fail_prefill_at if kind == "prefill"
+                           else self.fail_decode_at)
+        if index in sched:
+            self.fired.add(key)
+            self.launch_log.append((kind, index, "fail"))
+            raise InjectedFault(
+                f"injected {kind} launch failure at launch {index}")
+        if self.p_fail > 0.0 and self.rng.random() < self.p_fail:
+            self.fired.add(key)
+            self.launch_log.append((kind, index, "fail"))
+            raise InjectedFault(
+                f"injected random {kind} launch failure at launch {index}")
+        self.launch_log.append((kind, index, "ok"))
