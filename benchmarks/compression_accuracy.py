@@ -2,8 +2,22 @@
 
 The paper sweeps block size and reports model-size reduction at negligible
 accuracy loss (<2% DCNN; 0.32%/1.23% PER LSTM). We train the paper's MLP
-on deterministic synthetic image data for each k ∈ {1, 2, 4, 8, 16} (and
-12-bit quantization on/off) and report test accuracy + size reduction.
+on deterministic synthetic image data for each k ∈ {1, 2, 4, 8, 16} and
+report test accuracy + size reduction.
+
+The quantization arm sweeps bit width and reports BOTH deployment modes
+per width:
+
+* **PTQ** (post-training quantization): train in fp32, then evaluate with
+  the fixed-point forward — the trained fp32 params are reused unchanged.
+* **QAT** (quantization-aware training): train with the fake-quantized
+  forward (clipped-STE ``fixed_point``), so the weights adapt to the
+  rails during training.
+
+The old version of this benchmark trained the "quantized" arm with the
+fixed-point forward and labeled the result as plain quantization — i.e.
+it measured QAT but implied PTQ, hiding the PTQ-vs-QAT gap the paper's
+fixed-point results rest on. Both numbers are now reported explicitly.
 """
 
 from __future__ import annotations
@@ -19,8 +33,17 @@ from repro.nn.module import init_params, param_count
 from repro.optim.optimizers import adamw_init, adamw_update
 from repro.configs.base import TrainConfig
 
+DIMS = (784, 256, 256, 10)
+QUANT_BITS = (8, 12, 16)
 
-def _train_eval(model, steps=150, lr=3e-3, seed=0):
+
+def _train(model, steps=150, lr=3e-3, seed=0):
+    """Train ``model`` on the synthetic stream; returns the trained params.
+
+    When ``model.quant_bits`` is set, the forward is fake-quantized, so
+    this IS quantization-aware training (the optimizer still updates the
+    full-precision master copy).
+    """
     params = init_params(model.specs(), seed)
     tcfg = TrainConfig(learning_rate=lr, warmup_steps=10, total_steps=steps,
                        weight_decay=0.0)
@@ -41,7 +64,12 @@ def _train_eval(model, steps=150, lr=3e-3, seed=0):
         params, opt, l = step(params, opt, jnp.asarray(i),
                               jnp.asarray(xi.reshape(128, -1)),
                               jnp.asarray(yi))
-    # eval on held-out steps
+    return params
+
+
+def _eval(model, params):
+    """Held-out accuracy of ``model`` (its own forward — quantized when
+    ``model.quant_bits`` is set) over the fixed eval steps."""
     correct = total = 0
     for i in range(1000, 1008):
         xi, yi = synthetic_images(128, i)
@@ -52,24 +80,38 @@ def _train_eval(model, steps=150, lr=3e-3, seed=0):
     return correct / total
 
 
+def _train_eval(model, steps=150, lr=3e-3, seed=0):
+    return _eval(model, _train(model, steps=steps, lr=lr, seed=seed))
+
+
 def run():
-    dense_params = param_count(SWMMLP(dims=(784, 256, 256, 10),
-                                      block_size=0).specs())
+    dense_params = param_count(SWMMLP(dims=DIMS, block_size=0).specs())
     acc_dense = None
+    params_k8 = None
     for k in (0, 2, 4, 8, 16):
-        model = SWMMLP(dims=(784, 256, 256, 10), block_size=k)
-        acc = _train_eval(model)
+        model = SWMMLP(dims=DIMS, block_size=k)
+        params = _train(model)
+        acc = _eval(model, params)
         n = param_count(model.specs())
         if k == 0:
             acc_dense = acc
+        if k == 8:
+            params_k8 = params          # fp32 master copy for the PTQ arm
         emit(f"compression_accuracy/k{k or 'dense'}", 0.0,
              f"acc={acc:.4f};size_reduction={dense_params/n:.1f}x;"
              f"acc_delta_vs_dense={(acc_dense-acc)*100:+.2f}pp")
-    # quantized variant (paper uses 12-bit fixed point)
-    model = SWMMLP(dims=(784, 256, 256, 10), block_size=8, quant_bits=12)
-    acc = _train_eval(model)
-    emit("compression_accuracy/k8_quant12", 0.0,
-         f"acc={acc:.4f};acc_delta_vs_dense={(acc_dense-acc)*100:+.2f}pp")
+    # quantization arm (paper uses 12-bit fixed point): for each width,
+    # PTQ evaluates the k=8 fp32 params through the fixed-point forward;
+    # QAT retrains with the fake-quantized forward from scratch.
+    for bits in QUANT_BITS:
+        qmodel = SWMMLP(dims=DIMS, block_size=8, quant_bits=bits)
+        acc_ptq = _eval(qmodel, params_k8)
+        acc_qat = _train_eval(qmodel)
+        emit(f"compression_accuracy/k8_b{bits}",
+             0.0,
+             f"acc_ptq={acc_ptq:.4f};acc_qat={acc_qat:.4f};"
+             f"qat_gain={(acc_qat-acc_ptq)*100:+.2f}pp;"
+             f"acc_delta_vs_dense_qat={(acc_dense-acc_qat)*100:+.2f}pp")
 
 
 if __name__ == "__main__":

@@ -207,21 +207,96 @@ def loss_and_grad_of(loss):
     return jax.value_and_grad(loss)
 
 
+def quantized_tables(json_path: str = ""):
+    """int8 frozen frequency tables with in-kernel dequant vs the fp32 plan.
+
+    Structural wins asserted per shape: resident table bytes at most 0.55x
+    fp32 (int8 re/im + one f32 scale per block), IDENTICAL Pallas launch
+    count (dequant happens on the VMEM tile inside the existing kernel, no
+    extra launch), still no fft primitive, and bitwise-equal outputs vs the
+    same plan geometry run on the host-dequantized fp32 tables (int8 ->
+    f32 * scale is exact, so in-kernel dequant is not an approximation of
+    the fake-quantized weights — it IS them).
+    """
+    import dataclasses as dc
+
+    from repro.core.quant import dequantize_symmetric
+
+    report = {"mode": "quantized-tables", "interpret": True, "shapes": []}
+    for (B, p, q, k) in [(64, 8, 8, 64), (32, 16, 16, 32)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, q * k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (p, q, k),
+                              jnp.float32) * (q * k) ** -0.5
+        b = jax.random.normal(jax.random.PRNGKey(2), (p * k,), jnp.float32)
+
+        plan_f = build_plan(w, bias=b, activation="relu")
+        plan_q = build_plan(w, bias=b, activation="relu", quantize="int8")
+        bytes_f, bytes_q = plan_f.table_bytes(), plan_q.table_bytes()
+        ratio = bytes_q / bytes_f
+
+        # oracle: host-dequantize the stored int8 tables and run the SAME
+        # plan geometry in fp32 — the in-kernel dequant must match bitwise
+        plan_o = dc.replace(
+            plan_q,
+            wr=dequantize_symmetric(plan_q.wr, plan_q.scale),
+            wi=dequantize_symmetric(plan_q.wi, plan_q.scale),
+            scale=None,
+        )
+        y_q = jax.jit(plan_q.apply)(x)
+        y_o = jax.jit(plan_o.apply)(x)
+        bit_equal = bool(jnp.array_equal(y_q, y_o))
+
+        jp_q = jax.make_jaxpr(plan_q.apply)(x)
+        launches_q = count_pallas_launches(jp_q)
+        launches_f = count_pallas_launches(jax.make_jaxpr(plan_f.apply)(x))
+        no_fft = "fft" not in str(jp_q)
+        us_q = time_fn(jax.jit(plan_q.apply), x, iters=5, warmup=2)
+        emit(f"kernel/quant_int8_B{B}_p{p}_q{q}_k{k}", us_q,
+             f"bytes_ratio={ratio:.3f};bit_equal_vs_dequant={bit_equal};"
+             f"launches={launches_q};launches_fp32={launches_f};"
+             f"no_fft_in_jaxpr={no_fft};interpret=True")
+        assert bit_equal
+        assert launches_q == launches_f, (launches_q, launches_f)
+        assert ratio <= 0.55, ratio
+        assert no_fft
+
+        report["shapes"].append({
+            "B": B, "p": p, "q": q, "k": k,
+            "table_bytes_fp32": bytes_f, "table_bytes_int8": bytes_q,
+            "bytes_ratio": ratio, "bit_equal_vs_dequant": bit_equal,
+            "pallas_launches_int8": launches_q,
+            "pallas_launches_fp32": launches_f,
+            "no_fft": no_fft, "quant_us": us_q,
+        })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+
+
 def run(json_path: str = ""):
     correctness_and_vmem()
     plan_vs_per_call()
     fused_vs_unfused_gates()
     backward_timings(json_path)
+    quantized_tables()
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="",
-                    help="write the train-step (backward) report as JSON")
+                    help="write the train-step (backward) report as JSON "
+                         "(or the quantized-tables report with --quantize)")
     ap.add_argument("--train-step-only", action="store_true",
                     help="skip the forward-only sections")
+    ap.add_argument("--quantize", choices=("off", "int8"), default="off",
+                    help="int8: run ONLY the quantized-tables section "
+                         "(bytes ratio, launch parity, bitwise dequant "
+                         "equality) and write its JSON report")
     args = ap.parse_args()
-    if args.train_step_only:
+    if args.quantize == "int8":
+        quantized_tables(args.json)
+    elif args.train_step_only:
         backward_timings(args.json)
     else:
         run(args.json)

@@ -41,6 +41,12 @@ contract instead of timing: no hang, every request terminal, no slot or
 refcount leak, unaffected outputs bit-identical, compile budget
 unchanged.
 
+A fifth workload, ``quantize``, serves the mixed traffic through fp32 vs
+int8 frozen frequency tables vs a dequantized-table oracle engine and
+asserts the quantized-serving contract: int8 greedy outputs bit-identical
+to the oracle, resident frozen-table bytes at most 0.55x fp32, compile
+budget unchanged.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --json out.json
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --workload tail \
         --json out_tail.json
@@ -133,7 +139,8 @@ def _workload_prefix(n_requests: int, cache_len: int, seed: int):
 
 
 WORKLOADS = {"mixed": _workload_mixed, "tail": _workload_tail,
-             "prefix": _workload_prefix, "chaos": _workload_mixed}
+             "prefix": _workload_prefix, "chaos": _workload_mixed,
+             "quantize": _workload_mixed}
 
 
 def _run_chaos(n_requests, batch, cache_len, seed, json_path):
@@ -424,6 +431,86 @@ def _run_prefix(model, cfg, params, reqs, warmup, n_requests, batch,
     return report
 
 
+def _run_quantize(model, cfg, params, reqs, warmup, n_requests, batch,
+                  cache_len, seed, json_path):
+    """Quantize workload: fp32 frozen tables vs int8 frozen tables vs the
+    dequantized oracle (the int8 engine's tables dequantized back to fp32
+    and served through a quantize-off engine).
+
+    The contract asserted: int8 and oracle greedy outputs are BIT-identical
+    (int8 -> f32 * scale is exact, so serving the quantized tables is
+    serving the fake-quantized weights, not an approximation of them);
+    resident frozen-table bytes drop to <= 0.55x fp32; and the compile
+    budget is unchanged — quantization swaps array contents, never launch
+    shapes or executable counts."""
+    from repro.kernels.block_circulant.plan import dequantize_frozen
+
+    fp = ServeEngine(model, cfg, params, batch=batch, cache_len=cache_len)
+    fp.prewarm()
+    outs_f, row_f = _run(fp, warmup, reqs)
+    q = ServeEngine(model, cfg, params, batch=batch, cache_len=cache_len,
+                    quantize="int8")
+    q.prewarm()
+    outs_q, row_q = _run(q, warmup, reqs)
+    # oracle: the int8 engine's own tables, host-dequantized to fp32, served
+    # through a quantize-off engine (freeze_params passes frozen trees
+    # through untouched, so the oracle runs exactly these table values)
+    oracle = ServeEngine(model, cfg, dequantize_frozen(q.params),
+                         batch=batch, cache_len=cache_len)
+    oracle.prewarm()
+    outs_o, row_o = _run(oracle, warmup, reqs)
+
+    assert outs_q == outs_o, (
+        "int8 serving diverged from its dequantized-table oracle: "
+        "in-engine dequant must be bit-identical"
+    )
+    bytes_f, bytes_q = fp.frozen_table_bytes(), q.frozen_table_bytes()
+    ratio = bytes_q / max(bytes_f, 1)
+    assert ratio <= 0.55, (
+        f"int8 frozen tables are {ratio:.3f}x fp32 bytes (must be <= 0.55x)"
+    )
+    assert (row_q["prefill_compiles"] == row_f["prefill_compiles"]
+            and row_q["decode_compiles"] == row_f["decode_compiles"]), (
+        "quantization changed the compile budget: int8 tables must reuse "
+        "the fp32 engine's executable counts"
+    )
+    for row, eng in ((row_f, fp), (row_q, q), (row_o, oracle)):
+        row["frozen_table_bytes"] = eng.frozen_table_bytes()
+
+    report = {
+        "workload": {"name": "quantize", "n_requests": n_requests,
+                     "batch": batch, "cache_len": cache_len, "seed": seed,
+                     "total_tokens": row_q["tokens"],
+                     "host": "cpu-interpret"},
+        "fp32": row_f,
+        "int8": row_q,
+        "dequant_oracle": row_o,
+        "int8_equals_oracle": True,
+        "frozen_table_bytes_fp32": bytes_f,
+        "frozen_table_bytes_int8": bytes_q,
+        "frozen_table_bytes_ratio": ratio,
+        "compile_budget_unchanged": True,
+    }
+    for name, row in (("fp32", row_f), ("int8", row_q),
+                      ("dequant_oracle", row_o)):
+        emit(f"serve/{name}_B{batch}_N{n_requests}_quantize",
+             row["seconds"] * 1e6,
+             f"tok_s={row['tokens_per_sec']:.1f};"
+             f"frozen_table_bytes={row['frozen_table_bytes']};"
+             f"prefill_compiles={row['prefill_compiles']};"
+             f"decode_compiles={row['decode_compiles']};host=cpu")
+    emit("serve/quantize_int8", 0.0,
+         f"bytes_ratio={ratio:.3f};int8_equals_oracle=True;"
+         f"compile_budget_unchanged=True;"
+         f"tokens_per_sec_vs_fp32="
+         f"{row_q['tokens_per_sec'] / max(row_f['tokens_per_sec'], 1e-9):.2f}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+    return report
+
+
 def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
         seed: int = 0, workload: str = "mixed", json_path: str = ""):
     if workload == "chaos":
@@ -437,6 +524,9 @@ def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
     if workload == "prefix":
         return _run_prefix(model, cfg, params, reqs, warmup, n_requests,
                            batch, cache_len, seed, json_path)
+    if workload == "quantize":
+        return _run_quantize(model, cfg, params, reqs, warmup, n_requests,
+                             batch, cache_len, seed, json_path)
 
     wave = WaveEngine(model, cfg, params, batch=batch, cache_len=cache_len)
     outs_w, row_w = _run(wave, warmup, reqs)
@@ -522,7 +612,10 @@ def main():
                          "prefix: shared-prompt-head traffic where the "
                          "prefix cache skips repeated head prefill; "
                          "chaos: mixed traffic under seeded injected "
-                         "faults, asserting the fault-tolerance contract")
+                         "faults, asserting the fault-tolerance contract; "
+                         "quantize: mixed traffic through fp32 vs int8 "
+                         "frozen tables vs the dequantized oracle "
+                         "(bit-equality, bytes, compile budget)")
     ap.add_argument("--n-requests", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)

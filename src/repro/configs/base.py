@@ -230,3 +230,9 @@ class TrainConfig:
     grad_compression: str = "none"      # none | int8_ef
     checkpoint_every: int = 200
     checkpoint_dir: str = "/tmp/repro_ckpt"
+    # quantization-aware training: fake-quantize params through the clipped
+    # STE every forward (0 = off). frac_bits -1 derives bits-4, matching the
+    # paper's fixed-point split; biases/norm scales are exempt
+    # (quant.default_exempt).
+    qat_bits: int = 0
+    qat_frac_bits: int = -1

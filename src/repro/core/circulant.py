@@ -499,6 +499,21 @@ def _epilogue(y: jax.Array, bias: Optional[jax.Array], activation: str
     return apply_activation(y, activation)
 
 
+def dequantize_freq_pair(wr: jax.Array, wi: jax.Array,
+                         w_scale: Optional[jax.Array]):
+    """int8 frozen pair + per-(p, q)-block scale -> f32 pair (no-op when
+    ``w_scale`` is None). The XLA ``dft``/``freq`` fallback's analogue of
+    the Pallas kernel's in-tile dequant: identical float ops
+    (``quant.dequantize_symmetric``), so both paths see the same f32
+    tables and greedy outputs stay bit-identical across impls."""
+    if w_scale is None:
+        return wr, wi
+    from repro.core.quant import dequantize_symmetric
+
+    return (dequantize_symmetric(wr, w_scale),
+            dequantize_symmetric(wi, w_scale))
+
+
 def block_circulant_apply_fused(
     x: jax.Array,
     w: Optional[jax.Array],
@@ -507,6 +522,7 @@ def block_circulant_apply_fused(
     bias: Optional[jax.Array] = None,
     activation: str = "none",
     w_freq: Optional[Tuple[jax.Array, jax.Array]] = None,
+    w_scale: Optional[jax.Array] = None,
     k: Optional[int] = None,
     karatsuba: bool = False,
 ) -> jax.Array:
@@ -514,19 +530,22 @@ def block_circulant_apply_fused(
     frozen frequency weights ``w_freq=(wr, wi)``.
 
     * ``impl='pallas'`` — everything fuses into the kernel (epilogue runs in
-      VMEM before writeback; frozen weights skip rfft(w) entirely).
+      VMEM before writeback; frozen weights skip rfft(w) entirely;
+      ``w_scale`` marks int8 tables dequantized in-tile).
     * other impls — frozen weights route through the freq path (the paper's
-      BRAM-resident FFT(w)); epilogue is a trailing XLA elementwise (fused
-      by XLA itself).
+      BRAM-resident FFT(w)); int8 tables dequantize at trace entry
+      (:func:`dequantize_freq_pair`); epilogue is a trailing XLA
+      elementwise (fused by XLA itself).
     """
     if impl == "pallas":
         from repro.kernels.block_circulant import ops as bc_ops
 
         return bc_ops.block_circulant_matmul(
-            x, w, bias=bias, activation=activation, w_freq=w_freq, k=k
+            x, w, bias=bias, activation=activation, w_freq=w_freq,
+            w_scale=w_scale, k=k
         )
     if w_freq is not None:
-        wr, wi = w_freq
+        wr, wi = dequantize_freq_pair(*w_freq, w_scale)
         lead = x.shape[:-1]
         y = block_circulant_matvec_freq(
             x.reshape(-1, x.shape[-1]), w,
@@ -574,6 +593,7 @@ def block_circulant_apply_multi(
     activation: str = "none",
     w_freqs=None,
     w_freq_cat: Optional[Tuple[jax.Array, jax.Array]] = None,
+    w_scale_cat: Optional[jax.Array] = None,
     splits: Optional[Tuple[int, ...]] = None,
     bias_cat: Optional[jax.Array] = None,
     k: Optional[int] = None,
@@ -592,7 +612,9 @@ def block_circulant_apply_multi(
     ``plan.FUSED_KEY``) with explicit per-projection ``splits`` (p_i block
     counts) and ``k`` — the zero-concat serve path: no weight-side
     ``jnp.concatenate`` appears in the trace. ``bias_cat`` is the matching
-    pre-concatenated (Σp_i·k,) bias (mutually exclusive with ``biases``).
+    pre-concatenated (Σp_i·k,) bias (mutually exclusive with ``biases``);
+    ``w_scale_cat`` the matching stacked per-block scales when the fused
+    tables are int8.
     """
     if w_freq_cat is not None:
         if splits is None or k is None:
@@ -604,10 +626,11 @@ def block_circulant_apply_multi(
 
         return bc_ops.block_circulant_matmul_multi(
             x, ws, biases=biases, activation=activation, w_freqs=w_freqs,
-            w_freq_cat=w_freq_cat, splits=splits, bias_cat=bias_cat, k=k,
+            w_freq_cat=w_freq_cat, w_scale_cat=w_scale_cat, splits=splits,
+            bias_cat=bias_cat, k=k,
         )
     if w_freq_cat is not None:
-        wr, wi = w_freq_cat
+        wr, wi = dequantize_freq_pair(*w_freq_cat, w_scale_cat)
         ps = list(splits)
         lead = x.shape[:-1]
         y = block_circulant_matvec_freq(

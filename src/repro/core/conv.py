@@ -106,16 +106,19 @@ class CirculantConv2D:
 
         p, q = P // k, C // k
         x2d = patches.reshape(B * Ho * Wo, r * r * C)
-        w_bc, w_freq = None, None
+        w_bc, w_freq, w_scale = None, None, None
         if "wr" in params and "wi" in params:
             # frozen tables: freeze_params already stored them in the
             # (p, r²·q, K) block-table layout — no weight-side work here
+            # (w_scale rides along when the tables are int8)
             w_freq = (params["wr"], params["wi"])
+            w_scale = params.get("w_scale")
         else:
             # (t, p, q, k) tap table -> ONE (p, r²·q, k) block table whose
             # block index is t·q + j, matching the patch layout's (t, c)
             w_bc = params["w"].transpose(1, 0, 2, 3).reshape(p, r * r * q, k)
         y = bc_ops.block_circulant_matmul(
-            x2d, w_bc, bias=params["b"], w_freq=w_freq, k=k, q=r * r * q,
+            x2d, w_bc, bias=params["b"], w_freq=w_freq, w_scale=w_scale,
+            k=k, q=r * r * q,
         )
         return y.reshape(B, Ho, Wo, P)

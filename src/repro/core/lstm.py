@@ -83,6 +83,7 @@ class SWMLSTM:
             return circ.block_circulant_apply_multi(
                 xy, None, impl=self.swm.impl,
                 w_freq_cat=(fused["wr"], fused["wi"]),
+                w_scale_cat=fused.get("w_scale"),
                 splits=(self.d_cell // k,) * 4, bias_cat=fused["bias"],
                 k=k, karatsuba=self.swm.karatsuba,
             )
@@ -92,12 +93,16 @@ class SWMLSTM:
                      for px, pr in pairs)
         if frozen:
             # frequency tables only; time-domain concats would be dead code
+            # (int8 tables dequantize per side before the q-axis concat —
+            # the x/r halves carry separate per-block scales)
             ws = None
-            w_freqs = [
-                (jnp.concatenate([px["wr"], pr["wr"]], axis=1),
-                 jnp.concatenate([px["wi"], pr["wi"]], axis=1))
-                for px, pr in pairs
-            ]
+            deq = circ.dequantize_freq_pair
+            w_freqs = []
+            for px, pr in pairs:
+                xr, xi = deq(px["wr"], px["wi"], px.get("w_scale"))
+                rr, ri = deq(pr["wr"], pr["wi"], pr.get("w_scale"))
+                w_freqs.append((jnp.concatenate([xr, rr], axis=1),
+                                jnp.concatenate([xi, ri], axis=1)))
         else:
             ws = [jnp.concatenate([px["w"], pr["w"]], axis=1)
                   for px, pr in pairs]

@@ -1,4 +1,4 @@
-"""Fixed-point quantization simulation (paper §4.1).
+"""Fixed-point / int8 quantization (paper §4.1).
 
 The paper uses 12-bit (DCNN) / 16-bit (LSTM) fixed point for weights and
 activations, verified with a bit-wise C++ simulator. TPUs have no 12-bit
@@ -6,6 +6,25 @@ datapath, so we *simulate*: fake-quantize to (bits, frac_bits) fixed point
 with a clipped straight-through estimator (gradient passes only through the
 representable range — saturated values absorb none) so the accuracy
 benchmarks (§4.2 reproduction) can sweep bit widths.
+
+Two families live here:
+
+* ``fixed_point`` / ``quantize_tree`` — fixed-point fake-quant with a GLOBAL
+  (bits, frac_bits) grid, used for activation/weight simulation and QAT.
+  ``quantize_tree`` handles complex leaves (frozen ``rfft(w)`` tables stored
+  as complex64 fake-quantize through their re/im parts — previously they
+  silently escaped the floating-dtype check) and takes an ``exempt``
+  predicate for leaves whose dynamic range saturates at weight rails
+  (biases, norm scales).
+* ``symmetric_scales`` / ``quantize_symmetric`` / ``dequantize_symmetric`` /
+  ``fake_quant_symmetric`` — symmetric per-block max-abs int8, the scheme
+  ``dist.compress`` uses on gradients, applied to the frozen frequency
+  tables: one f32 scale per (p, q) circulant block shared across the K
+  frequency bins AND the re/im parts, int8 payload. The Pallas kernel
+  dequantizes on the VMEM tile (``kernel._bc_kernel``); ``fake_quant_*`` is
+  the bit-exact training-time / oracle counterpart (dequant(quant(x)) with a
+  clipped-STE gradient), so in-kernel int8 dequant and the fake-quant dense
+  oracle produce identical floats at the same (bits, scales).
 """
 
 from __future__ import annotations
@@ -15,7 +34,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["fixed_point", "quantize_tree"]
+__all__ = [
+    "fixed_point", "quantize_tree", "default_exempt",
+    "symmetric_scales", "quantize_symmetric", "dequantize_symmetric",
+    "fake_quant_symmetric",
+]
+
+# Symmetric scales are clamped away from zero so all-zero blocks (e.g. tile
+# padding) round-trip to exact zeros instead of 0/0. Matches dist.compress.
+_SCALE_FLOOR = 1e-30
 
 
 def _rails(bits: int, frac_bits: int):
@@ -54,11 +81,134 @@ def _fq_bwd(bits, frac_bits, x, g):
 fixed_point.defvjp(_fq_fwd, _fq_bwd)
 
 
-def quantize_tree(params, bits: int = 12, frac_bits: int = 8):
-    """Fake-quantize every floating leaf of a param tree."""
-    def q(x):
+def _path_names(path) -> tuple:
+    """jax key path -> tuple of plain string key names."""
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "name",
+                                                 getattr(p, "idx", p)))))
+    return tuple(out)
+
+
+def default_exempt(path_names) -> bool:
+    """Default QAT exemption: biases and norm scales.
+
+    Their dynamic range is unrelated to the weight rails — a gemma-style
+    RMSNorm scale or an LSTM gate bias saturating at the (bits, frac_bits)
+    weight grid absorbs its entire gradient through the clipped STE, so the
+    paper's fixed-point sweeps keep them full precision. Matches leaf keys
+    named ``bias``/``scale``/``gamma``/``beta``, short b-prefixed bias keys
+    (``b``, ``b0``, ``bi``…), and ``*_b``.
+    """
+    name = path_names[-1] if path_names else ""
+    if name in ("bias", "scale", "w_scale", "gamma", "beta"):
+        return True
+    return (name.startswith("b") and len(name) <= 3) or name.endswith("_b")
+
+
+def quantize_tree(params, bits: int = 12, frac_bits: int = 8, exempt=None):
+    """Fake-quantize every floating AND complex leaf of a param tree.
+
+    Complex leaves (frozen frequency tables stored as complex64) quantize
+    through their re/im components — ``jnp.issubdtype(complex64, floating)``
+    is False, so the old floating-only check silently skipped them and a
+    "quantized" frozen tree was actually full precision. ``exempt`` is a
+    predicate over the tuple of key names from the root (see
+    :func:`default_exempt`); exempt leaves pass through untouched.
+    """
+    def q(path, x):
+        if exempt is not None and exempt(_path_names(path)):
+            return x
+        if jnp.issubdtype(x.dtype, jnp.complexfloating):
+            re = fixed_point(jnp.real(x), bits, frac_bits)
+            im = fixed_point(jnp.imag(x), bits, frac_bits)
+            return (re + 1j * im).astype(x.dtype)
         if jnp.issubdtype(x.dtype, jnp.floating):
             return fixed_point(x, bits, frac_bits)
         return x
 
-    return jax.tree.map(q, params)
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric per-block int8 (frozen frequency tables)
+# ---------------------------------------------------------------------------
+
+
+def _qmax(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def symmetric_scales(wr: jax.Array, wi: jax.Array, bits: int = 8
+                     ) -> jax.Array:
+    """Per-block symmetric max-abs scale for an (…, p, q, K) re/im pair.
+
+    One f32 scale per (p, q) circulant block, shared across the K frequency
+    bins and both the re and im parts: ``s = max(|wr|, |wi|) / qmax``. The
+    shared scale is what lets the kernel dequantize a (pt, qt, K) tile with
+    a single (pt, qt, 1) broadcast multiply, and what makes fused-group
+    concatenation commute with quantization (scales concatenate alongside
+    tables block-for-block).
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(wr), axis=-1),
+                       jnp.max(jnp.abs(wi), axis=-1))
+    return jnp.maximum(amax.astype(jnp.float32) / _qmax(bits), _SCALE_FLOOR)
+
+
+def quantize_symmetric(x: jax.Array, scale: jax.Array, bits: int = 8
+                       ) -> jax.Array:
+    """(…, p, q, K) f32 table -> int8 with per-(p, q) ``scale``."""
+    if bits > 8:
+        raise ValueError(f"int8 storage holds at most 8 bits, got {bits}")
+    qm = _qmax(bits)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -qm, qm)
+    return q.astype(jnp.int8)
+
+
+def dequantize_symmetric(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_symmetric`: ``q.astype(f32) * scale``.
+
+    Exactly the expression ``kernel._bc_kernel`` evaluates on the VMEM tile
+    — int8 -> f32 is exact and the broadcast multiply is the same float op,
+    so host-side dequant + fp32 kernel is bit-identical to in-kernel dequant.
+    """
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fq_sym(bits: int, x: jax.Array, scale: jax.Array) -> jax.Array:
+    qm = _qmax(bits)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -qm, qm)
+    return (q * scale[..., None]).astype(x.dtype)
+
+
+def _fq_sym_fwd(bits, x, scale):
+    return _fq_sym(bits, x, scale), (x, scale)
+
+
+def _fq_sym_bwd(bits, res, g):
+    x, scale = res
+    lim = _qmax(bits) * scale[..., None]
+    inside = (x >= -lim) & (x <= lim)
+    return (jnp.where(inside, g, jnp.zeros_like(g)),
+            jnp.zeros_like(scale))
+
+
+_fq_sym.defvjp(_fq_sym_fwd, _fq_sym_bwd)
+
+
+def fake_quant_symmetric(wr: jax.Array, wi: jax.Array, bits: int = 8):
+    """QAT / oracle counterpart of the int8 freeze: ``(wr_fq, wi_fq, scale)``.
+
+    Scales derive from the stop-gradiented pair (quantization grids don't
+    backprop); the fake-quantized tables equal
+    ``dequantize_symmetric(quantize_symmetric(w, s), s)`` bit for bit, with
+    the clipped-STE gradient of :func:`fixed_point` (cotangent zero where
+    the forward clipped at ±qmax·s — with max-abs scales nothing clips, so
+    this matters only for externally supplied scales).
+    """
+    scale = symmetric_scales(jax.lax.stop_gradient(wr),
+                             jax.lax.stop_gradient(wi), bits)
+    return _fq_sym(bits, wr, scale), _fq_sym(bits, wi, scale), scale

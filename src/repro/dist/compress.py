@@ -45,16 +45,22 @@ def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return q.astype(jnp.int8), scale
 
 
-def int8_decompress(q: jax.Array, scale: jax.Array, shape, size: int
-                    ) -> jax.Array:
-    """Inverse of :func:`int8_compress` (drops the chunk padding)."""
+def int8_decompress(q: jax.Array, scale: jax.Array, shape, size: int,
+                    dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`int8_compress` (drops the chunk padding).
+
+    ``dtype`` restores the caller's gradient dtype: the dequant math runs in
+    f32 (scales are f32), but a bf16 gradient tree must come back bf16 —
+    otherwise one `_roundtrip` silently promotes the whole EF residual tree
+    and `compressed_psum_grads` no longer round-trips dtypes.
+    """
     deq = q.astype(jnp.float32) * scale[:, None]
-    return deq.reshape(-1)[:size].reshape(shape)
+    return deq.reshape(-1)[:size].reshape(shape).astype(dtype)
 
 
 def _roundtrip(g: jax.Array) -> jax.Array:
     q, s = int8_compress(g)
-    return int8_decompress(q, s, g.shape, g.size)
+    return int8_decompress(q, s, g.shape, g.size, g.dtype)
 
 
 def apply_error_feedback(g: jax.Array, residual: jax.Array
@@ -62,11 +68,14 @@ def apply_error_feedback(g: jax.Array, residual: jax.Array
     """(transmitted, new_residual) for one step of EF-compressed SGD.
 
     transmitted = Q(g + residual); new_residual = (g + residual) - transmitted.
-    Summing over steps telescopes: Σ tx_t + residual_T == Σ g_t.
+    Summing over steps telescopes: Σ tx_t + residual_T == Σ g_t. Both outputs
+    come back in ``g.dtype`` (the error accumulation itself runs in f32 so a
+    bf16 residual loses no more than bf16 storage demands).
     """
-    corrected = g + residual
-    tx = _roundtrip(corrected)
-    return tx, corrected - tx
+    corrected = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    tx = _roundtrip(corrected).astype(g.dtype)
+    new_residual = (corrected - tx.astype(jnp.float32)).astype(g.dtype)
+    return tx, new_residual
 
 
 def compressed_psum_grads(grads, residuals, mesh, axes=("data",)):

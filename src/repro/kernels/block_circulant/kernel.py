@@ -32,6 +32,17 @@ TPU adaptation of the paper's FPGA/ASIC dataflow (§5):
 Grid: ``(B/bB, p/pt, q/qt)`` with q innermost, so the frequency-domain
 accumulator lives in VMEM scratch across the contraction.
 
+Quantized tables (the paper's 12–16-bit fixed-point results, §4): frozen
+(wr, wi) may instead be stored int8 with one symmetric f32 scale per
+(p, q) circulant block, shared across the K frequency bins and the re/im
+pair (``quant.symmetric_scales``). The int8 tiles stream HBM→VMEM at 1/4
+the fp32 bandwidth and are dequantized *inside* the kernel, on the VMEM
+tile, right before the per-bin complex GEMM — a single (pt, qt, 1)
+broadcast multiply, the same position the MSR bit-truncation decode holds
+between BRAM and the multiplier array in the FPGA pipeline. Tile geometry
+is chosen with the fp32 ``vmem_estimate`` either way so quantized and
+fp32 plans compile to identically-shaped executables.
+
 The per-bin contraction ``y[b,p,f] += Σ_q x[b,q,f]·w[p,q,f]`` is expressed
 as a frequency-batched ``dot_general``; Mosaic unrolls the K batch entries
 into 2-D MXU dots. (The pure-XLA ``dft``/``freq`` paths in
@@ -97,20 +108,34 @@ def _cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
 
 
-def vmem_estimate(bB: int, pt: int, qt: int, k: int) -> int:
+def vmem_estimate(bB: int, pt: int, qt: int, k: int,
+                  quantized: bool = False) -> int:
     """Bytes of VMEM working set for one (bB, pt, qt) tile assignment.
 
     x tile + (wr, wi) tiles double-buffered, f32 accumulator scratch pair,
     y tile, and the four resident DFT basis matrices. The single source of
     truth shared by :func:`choose_blocks` and benchmarks/kernel_bench.py.
+
+    ``quantized=True`` reports the int8-table working set: the streamed
+    (wr, wi) tiles shrink 4× (int8 payload) plus a per-(p, q) f32 scale
+    tile, and one f32 dequantized copy of the pair is charged (produced by
+    the in-kernel dequant, live only within the grid step, so not
+    double-buffered). Tile *selection* (:func:`choose_blocks`) always uses
+    the fp32 estimate — quantized and fp32 plans must share identical tile
+    geometry so the serve paths compile to the same executables.
     """
     K = k // 2 + 1
     x_t = bB * qt * k * 4
-    w_t = 2 * pt * qt * K * 4
+    if quantized:
+        w_t = 2 * pt * qt * K * 1 + pt * qt * 4   # int8 pair + f32 scales
+        deq = 2 * pt * qt * K * 4                  # in-kernel f32 copy
+    else:
+        w_t = 2 * pt * qt * K * 4
+        deq = 0
     acc = 2 * bB * pt * K * 4
     y_t = bB * pt * k * 4
     dft = 2 * k * K * 4 + 2 * K * k * 4
-    return 2 * (x_t + w_t) + acc + y_t + dft   # ×2: double buffering
+    return 2 * (x_t + w_t) + acc + y_t + dft + deq   # ×2: double buffering
 
 
 def choose_batch_block(B: int, pt: int, qt: int, k: int,
@@ -194,22 +219,31 @@ def choose_blocks(B: int, p: int, q: int, k: int,
 
 def _bc_kernel(x_ref, wr_ref, wi_ref, c_ref, s_ref, ci_ref, si_ref,
                *refs, k: int, nq: int, out_dtype, activation: str = "none",
-               has_bias: bool = False):
+               has_bias: bool = False, has_scale: bool = False):
     """One (b, i, j) grid step. Shapes (per tile):
-      x_ref  : (bB, qt·k)      wr/wi : (pt, qt, K)
+      x_ref  : (bB, qt·k)      wr/wi : (pt, qt, K) f32 — or int8 w/ has_scale
       c/s    : (k, K)          ci/si : (K, k)
+      sc_ref : (pt, qt)        [only when has_scale — f32 per-block scales]
       b_ref  : (1, pt·k)       [only when has_bias]
       o_ref  : (bB, pt·k)      yr/yi : (bB, pt, K) f32 scratch
+
+    Quantized tables (``has_scale``): wr/wi stream HBM→VMEM as int8 (4× the
+    effective weight bandwidth of the fp32 path) and dequantize HERE, on the
+    VMEM tile, immediately before the per-bin complex GEMM — one broadcast
+    multiply by the (pt, qt, 1) scale tile, the analogue of the MSR
+    bit-truncation decode sitting between BRAM and the FPGA multiplier
+    array. The scale is shared across the K bins and the re/im pair, so the
+    dequant is exactly ``quant.dequantize_symmetric`` and the kernel output
+    is bit-identical to running the fp32 kernel on host-dequantized tables.
 
     The fused epilogue (bias add + activation) runs on the final q step,
     after the inverse rDFT and before the VMEM→HBM writeback — mirroring the
     paper's IFFT + bias/activation peripheral stage.
     """
-    if has_bias:
-        b_ref, o_ref, yr_acc, yi_acc = refs
-    else:
-        o_ref, yr_acc, yi_acc = refs
-        b_ref = None
+    refs = list(refs)
+    sc_ref = refs.pop(0) if has_scale else None
+    b_ref = refs.pop(0) if has_bias else None
+    o_ref, yr_acc, yi_acc = refs
     j = pl.program_id(2)
     K = k // 2 + 1
     bB = x_ref.shape[0]
@@ -227,6 +261,11 @@ def _bc_kernel(x_ref, wr_ref, wi_ref, c_ref, s_ref, ci_ref, si_ref,
     xi = (xb @ s_ref[...]).reshape(bB, qt, K)
     wr = wr_ref[...]
     wi = wi_ref[...]
+    if has_scale:
+        # in-tile dequant: int8 -> f32 is exact, then one broadcast multiply
+        sc = sc_ref[...][..., None]
+        wr = wr.astype(jnp.float32) * sc
+        wi = wi.astype(jnp.float32) * sc
     # per-bin complex GEMM: contract q, batch f  (bqf,pqf->bpf)
     dn = (((1,), (1,)), ((2,), (2,)))   # contracting q; batching f
     def dot(a, b):
@@ -263,6 +302,7 @@ def bc_matmul_pallas(
     ci: jax.Array,
     si: jax.Array,
     bias: Optional[jax.Array] = None,
+    w_scale: Optional[jax.Array] = None,
     *,
     k: int,
     block_b: int,
@@ -274,9 +314,11 @@ def bc_matmul_pallas(
     """x (B, q·k) × freq-weights (p, q, K)·2 -> y (B, p·k).
 
     ``bias`` (1, p·k) and ``activation`` run inside the kernel's final-q
-    epilogue (fused, no extra HBM round-trip). Caller (ops.py / plan.py)
-    guarantees B % block_b == 0, p % block_p == 0, q % block_q == 0 (it
-    pads otherwise).
+    epilogue (fused, no extra HBM round-trip). With ``w_scale`` (p, q) f32,
+    wr/wi are int8 tables dequantized in-kernel on the VMEM tile (see
+    ``_bc_kernel``); the scale tile rides the same (i, j) index map as the
+    weight tiles. Caller (ops.py / plan.py) guarantees B % block_b == 0,
+    p % block_p == 0, q % block_q == 0 (it pads otherwise).
     """
     B = x.shape[0]
     p, q, K = wr.shape
@@ -284,9 +326,10 @@ def bc_matmul_pallas(
     grid = (B // block_b, p // block_p, q // block_q)
 
     has_bias = bias is not None
+    has_scale = w_scale is not None
     kernel = functools.partial(
         _bc_kernel, k=k, nq=grid[2], out_dtype=x.dtype,
-        activation=activation, has_bias=has_bias,
+        activation=activation, has_bias=has_bias, has_scale=has_scale,
     )
     in_specs = [
         pl.BlockSpec((block_b, block_q * k), lambda b, i, j: (b, j)),
@@ -298,6 +341,11 @@ def bc_matmul_pallas(
         pl.BlockSpec((K, k), lambda b, i, j: (0, 0)),
     ]
     args = [x, wr, wi, c, s, ci, si]
+    if has_scale:
+        in_specs.append(
+            pl.BlockSpec((block_p, block_q), lambda b, i, j: (i, j))
+        )
+        args.append(w_scale)
     if has_bias:
         in_specs.append(
             pl.BlockSpec((1, block_p * k), lambda b, i, j: (0, i))

@@ -182,11 +182,15 @@ def _tiles(B: int, p: int, q: int, k: int) -> Tuple[int, int, int]:
 def _run_kernel(x2d: jax.Array, wr: jax.Array, wi: jax.Array,
                 bias2d: Optional[jax.Array], k: int, activation: str,
                 interpret: bool,
-                tiles: Optional[Tuple[int, int]] = None) -> jax.Array:
+                tiles: Optional[Tuple[int, int]] = None,
+                w_scale: Optional[jax.Array] = None) -> jax.Array:
     """Pad (rows + block dims) and launch. wr/wi (P, Q, K) may already be
     tile-aligned (plan path) — padding is then a no-op. Returns the FULL
     (B, P_pad·k) output; the caller slices. ``tiles=(pt, qt)`` uses the
-    plan's frozen block tiles (only the batch tile stays runtime-chosen)."""
+    plan's frozen block tiles (only the batch tile stays runtime-chosen).
+    ``w_scale`` (P, Q) f32 marks wr/wi as int8 tables dequantized in-kernel
+    (padding blocks carry the scale floor and all-zero int8 payloads, so
+    they still contribute exact zeros)."""
     P, Q, _ = wr.shape
     B = x2d.shape[0]
     if tiles is not None:
@@ -198,6 +202,8 @@ def _run_kernel(x2d: jax.Array, wr: jax.Array, wi: jax.Array,
     xp = _pad_to(xp, 1, Q * k)           # x cols up to the weight's Q blocks
     wr = _pad_to(_pad_to(wr, 0, pt), 1, qt)
     wi = _pad_to(_pad_to(wi, 0, pt), 1, qt)
+    if w_scale is not None:
+        w_scale = _pad_to(_pad_to(w_scale, 0, pt), 1, qt)
     if wr.shape[1] != Q:                 # q padded -> pad x block dim to match
         xp = _pad_to(
             xp.reshape(xp.shape[0], Q, k), 1, qt
@@ -206,7 +212,7 @@ def _run_kernel(x2d: jax.Array, wr: jax.Array, wi: jax.Array,
         bias2d = _pad_to(bias2d, 1, pt * k)
     c, s, ci, si = dft_bases(k, jnp.float32)
     y = bc_matmul_pallas(
-        xp, wr, wi, c, s, ci, si, bias2d,
+        xp, wr, wi, c, s, ci, si, bias2d, w_scale,
         k=k, block_b=bB, block_p=pt, block_q=qt, interpret=interpret,
         activation=activation,
     )
@@ -378,6 +384,21 @@ def _freq_bwd(interpret, activation, k, p, tiles, res, g):
 _bc_freq2d.defvjp(_freq_fwd, _freq_bwd)
 
 
+def _bc_freq_quant2d(interpret: bool, activation: str, k: int, p: int,
+                     tiles: Optional[Tuple[int, int]],
+                     x2d: jax.Array, wr: jax.Array, wi: jax.Array,
+                     w_scale: jax.Array,
+                     bias2d: Optional[jax.Array]) -> jax.Array:
+    """Primal-only int8 frozen path: wr/wi int8 + per-block f32 scales,
+    dequantized inside the kernel. Serving is inference-only here — QAT
+    trains through ``quant.fake_quant_symmetric`` on fp32 tables instead,
+    so this path deliberately carries no VJP (grad through int8 storage
+    would be a silent zero)."""
+    y = _run_kernel(x2d, wr, wi, bias2d, k, activation, interpret, tiles,
+                    w_scale=w_scale)
+    return y[:, : p * k]
+
+
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
@@ -396,6 +417,7 @@ def block_circulant_matmul(
     bias: Optional[jax.Array] = None,
     activation: str = "none",
     w_freq: Optional[Tuple[jax.Array, jax.Array]] = None,
+    w_scale: Optional[jax.Array] = None,
     k: Optional[int] = None,
     q: Optional[int] = None,
     tiles: Optional[Tuple[int, int]] = None,
@@ -408,10 +430,14 @@ def block_circulant_matmul(
     selects the frozen frequency path (no fft in the traced step); pass
     ``k`` alongside when w is None (K alone is ambiguous for odd k), and
     the true ``q`` plus the frozen ``tiles=(pt, qt)`` when wr/wi are
-    tile-padded along the block axes (plans).
+    tile-padded along the block axes (plans). ``w_scale`` (p, q) f32 marks
+    the frozen tables as int8 with per-block symmetric scales, dequantized
+    inside the kernel (inference-only: no VJP on the quantized path).
     """
     if interpret is None:
         interpret = not _on_tpu()
+    if w_scale is not None and w_freq is None:
+        raise ValueError("w_scale only applies to frozen w_freq tables")
     if w_freq is not None:
         wr, wi = w_freq
         p = wr.shape[0]
@@ -431,7 +457,10 @@ def block_circulant_matmul(
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
     b2d = _as_bias2d(bias)
-    if w_freq is not None:
+    if w_freq is not None and w_scale is not None:
+        y = _bc_freq_quant2d(bool(interpret), activation, int(k), int(p),
+                             tiles, x2d, wr, wi, w_scale, b2d)
+    elif w_freq is not None:
         y = _bc_freq2d(bool(interpret), activation, int(k), int(p),
                        tiles, x2d, wr, wi, b2d)
     else:
@@ -447,6 +476,7 @@ def block_circulant_matmul_multi(
     activation: str = "none",
     w_freqs: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
     w_freq_cat: Optional[Tuple[jax.Array, jax.Array]] = None,
+    w_scale_cat: Optional[jax.Array] = None,
     splits: Optional[Sequence[int]] = None,
     bias_cat: Optional[jax.Array] = None,
     k: Optional[int] = None,
@@ -464,7 +494,11 @@ def block_circulant_matmul_multi(
     ``bias_cat``) take the table already stacked — the pre-concatenated
     frozen group ``plan.freeze_params`` builds at serve-load time — so the
     traced launch contains no weight-side concatenate at all.
+    ``w_scale_cat`` (Σp_i, q) f32 marks the stacked tables as int8
+    (quantization commutes with p-axis stacking: scales are per-block).
     """
+    if w_scale_cat is not None and w_freq_cat is None:
+        raise ValueError("w_scale_cat only applies to w_freq_cat tables")
     if w_freq_cat is not None:
         if splits is None or k is None:
             raise ValueError("w_freq_cat needs explicit splits and k")
@@ -473,7 +507,7 @@ def block_circulant_matmul_multi(
         ps = [int(p) for p in splits]
         y = block_circulant_matmul(
             x, None, bias=bias_cat, activation=activation,
-            w_freq=w_freq_cat, k=k, interpret=interpret,
+            w_freq=w_freq_cat, w_scale=w_scale_cat, k=k, interpret=interpret,
         )
         return split_outputs(y, ps, k)
     if w_freqs is not None:

@@ -28,6 +28,20 @@ table per group under the reserved ``"_fused"`` key — exactly the data a
 :func:`build_multi_plan` ``BCMultiPlan`` would carry — so the traced
 prefill/decode steps launch the fused projection without a single
 ``jnp.concatenate`` over weight tables in their jaxpr.
+
+Quantized freezing (``quantize="int8"``): the frozen tables are stored int8
+with ONE symmetric f32 max-abs scale per (p, q) circulant block, shared
+across the K frequency bins and the re/im pair (``quant.symmetric_scales``
+— the same scheme ``dist.compress`` uses on gradients), attached as a
+sibling ``w_scale`` leaf. Resident table HBM drops ~4× on top of the rfft
+freeze's 2×; the Pallas kernel dequantizes on the VMEM tile
+(``kernel._bc_kernel``) and the pure-XLA ``dft``/``freq`` fallbacks
+dequantize at trace entry, so greedy outputs are bit-identical to running
+the fp32 path on host-dequantized tables. Because scales are per-block,
+quantization commutes with the fused-group concatenation — scales stack
+alongside the tables block for block. Tile geometry is always derived from
+the fp32 ``vmem_estimate`` so quantized and fp32 plans share identical
+tiles (and therefore identical serve executables/compile budget).
 """
 
 from __future__ import annotations
@@ -40,6 +54,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.circulant import concat_biases, split_outputs
+from repro.core.quant import (dequantize_symmetric, quantize_symmetric,
+                              symmetric_scales)
 from repro.kernels.block_circulant.kernel import (choose_blocks,
                                                  choose_blocks_dw,
                                                  vmem_estimate)
@@ -56,8 +72,15 @@ __all__ = [
     "clear_plan_cache",
     "freeze_params",
     "count_frozen_tables",
+    "frozen_table_bytes",
+    "dequantize_frozen",
     "FUSED_KEY",
+    "QUANTIZE_MODES",
 ]
+
+# Legal ``quantize=`` values for freeze_params/build_plan (and, transitively,
+# ServeEngine / launch.serve --quantize).
+QUANTIZE_MODES = ("off", "int8")
 
 # Reserved param-tree key for a pre-concatenated multi-projection frozen
 # group ({"wr", "wi"[, "bias"]}). Attached by freeze_params; consumed by the
@@ -87,8 +110,11 @@ class PlanGeometry:
     def K(self) -> int:
         return self.k // 2 + 1
 
-    def vmem_bytes(self, bB: int) -> int:
-        return vmem_estimate(bB, self.pt, self.qt, self.k)
+    def vmem_bytes(self, bB: int, quantized: bool = False) -> int:
+        """VMEM working set; ``quantized`` reports the int8-table variant.
+        Tile CHOICE always uses the fp32 estimate (geometry identity)."""
+        return vmem_estimate(bB, self.pt, self.qt, self.k,
+                             quantized=quantized)
 
 
 @functools.lru_cache(maxsize=1024)
@@ -135,7 +161,7 @@ def clear_plan_cache() -> None:
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("wr", "wi", "bias"),
+    data_fields=("wr", "wi", "bias", "scale"),
     meta_fields=("k", "p", "q", "pt", "qt", "splits", "activation",
                  "interpret"),
 )
@@ -143,12 +169,17 @@ def clear_plan_cache() -> None:
 class BCPlan:
     """A frozen frequency-domain execution plan for one projection (or one
     stacked multi-projection). Registered as a pytree: jit/scan/device_put
-    treat (wr, wi, bias) as data and the geometry as static. The rDFT basis
-    matrices are NOT stored — they are k-only constants that the launch
-    path materializes from the lru-cached ``dft_bases(k)``."""
+    treat (wr, wi, bias, scale) as data and the geometry as static. The rDFT
+    basis matrices are NOT stored — they are k-only constants that the
+    launch path materializes from the lru-cached ``dft_bases(k)``.
 
-    wr: jax.Array                      # (p_pad, q_pad, K) f32
-    wi: jax.Array                      # (p_pad, q_pad, K) f32
+    Quantized plans (``build_plan(..., quantize="int8")``) store wr/wi as
+    int8 and carry the per-(p, q)-block f32 ``scale``; the kernel
+    dequantizes in-tile. Geometry (pt, qt, padding) is identical to the
+    fp32 plan of the same (p, q, k)."""
+
+    wr: jax.Array                      # (p_pad, q_pad, K) f32 — int8 if quant
+    wi: jax.Array                      # (p_pad, q_pad, K) f32 — int8 if quant
     bias: Optional[jax.Array]          # (1, p·k) f32 or None
     k: int
     p: int                             # true (unpadded) output blocks
@@ -158,6 +189,7 @@ class BCPlan:
     splits: Tuple[int, ...]            # per-projection p_i (multi-plans)
     activation: str
     interpret: bool
+    scale: Optional[jax.Array] = None  # (p_pad, q_pad) f32 when quantized
 
     # -- derived -------------------------------------------------------
     @property
@@ -171,6 +203,17 @@ class BCPlan:
     @property
     def n_projections(self) -> int:
         return len(self.splits)
+
+    @property
+    def quantized(self) -> bool:
+        return self.scale is not None
+
+    def table_bytes(self) -> int:
+        """Resident bytes of the frozen tables (+ scales when quantized)."""
+        n = self.wr.nbytes + self.wi.nbytes
+        if self.scale is not None:
+            n += self.scale.nbytes
+        return n
 
     def cache_key(self) -> Tuple:
         """The geometry-cache key this plan was derived from."""
@@ -190,7 +233,7 @@ class BCPlan:
         """x (..., q·k) -> (..., p·k), fused epilogue included. The traced
         computation contains no fft and no weight-side transform/pad."""
         return bc_ops.block_circulant_matmul(
-            x, None, w_freq=(self.wr, self.wi),
+            x, None, w_freq=(self.wr, self.wi), w_scale=self.scale,
             bias=self.bias, activation=self.activation, k=self.k, q=self.q,
             tiles=(self.pt, self.qt), interpret=self.interpret,
         )[..., : self.out_dim]
@@ -210,6 +253,12 @@ def _pad_freq(wr, wi, geo: PlanGeometry):
     return wr, wi
 
 
+def _check_quantize(quantize: str) -> None:
+    if quantize not in QUANTIZE_MODES:
+        raise ValueError(
+            f"quantize={quantize!r}; expected one of {QUANTIZE_MODES}")
+
+
 def build_plan(
     w: jax.Array,
     *,
@@ -217,23 +266,32 @@ def build_plan(
     activation: str = "none",
     interpret: Optional[bool] = None,
     b_hint: int = _B_HINT,
+    quantize: str = "off",
 ) -> BCPlan:
     """Precompute a plan from a time-domain block table w (p, q, k).
 
     Runs rfft(w), tile choice, and padding ONCE — call at init or after
-    checkpoint load, never inside the step function.
+    checkpoint load, never inside the step function. ``quantize="int8"``
+    additionally quantizes the padded tables (padding blocks are all-zero,
+    so they land on the scale floor and still contribute exact zeros).
     """
+    _check_quantize(quantize)
     if interpret is None:
         interpret = not bc_ops._on_tpu()
     p, q, k = w.shape
     geo = plan_geometry(p, q, k, "float32", b_hint)
     wr, wi = bc_ops.freq_weights(w)
     wr, wi = _pad_freq(wr, wi, geo)
+    scale = None
+    if quantize == "int8":
+        scale = symmetric_scales(wr, wi)
+        wr = quantize_symmetric(wr, scale)
+        wi = quantize_symmetric(wi, scale)
     b2d = bc_ops._as_bias2d(bias)
     return BCPlan(
         wr=wr, wi=wi, bias=b2d,
         k=k, p=p, q=q, pt=geo.pt, qt=geo.qt, splits=(p,),
-        activation=activation, interpret=bool(interpret),
+        activation=activation, interpret=bool(interpret), scale=scale,
     )
 
 
@@ -244,12 +302,14 @@ def build_multi_plan(
     activation: str = "none",
     interpret: Optional[bool] = None,
     b_hint: int = _B_HINT,
+    quantize: str = "off",
 ) -> BCPlan:
     """Stack N same-(q, k) projections along p into ONE plan / ONE launch.
 
     The C-LSTM gate fusion at plan level: 4 gate matrices (or attention
     Q/K/V) that read the same input become a single (Σp_i, q, k) table.
     ``apply_multi`` splits the fused output back per projection.
+    (``quantize`` commutes with the stacking — scales are per-block.)
     """
     if interpret is None:
         interpret = not bc_ops._on_tpu()
@@ -265,7 +325,7 @@ def build_multi_plan(
     w_cat = jnp.concatenate(list(ws), axis=0)
     bias_cat = concat_biases(splits, biases, k)
     plan = build_plan(w_cat, bias=bias_cat, activation=activation,
-                      interpret=interpret, b_hint=b_hint)
+                      interpret=interpret, b_hint=b_hint, quantize=quantize)
     return dataclasses.replace(plan, splits=splits)
 
 
@@ -298,18 +358,39 @@ def _attach_fused(out: Dict[str, Any]) -> bool:
     extra footprint is the rfft tables of the fused projections only —
     small next to the KV cache, and the time-domain ``w`` is still
     dropped.
+
+    Quantized members fuse too: per-(p, q)-block scales concatenate
+    alongside the tables (p axis for the projection/gate stack, q axis for
+    the LSTM x/r halves) — quantization commutes with the fusion exactly
+    because scales never cross a block boundary.
     """
     if FUSED_KEY in out:
         return False
+
+    def _cat_scales(scales, cat):
+        """Fused w_scale from the members' scales: all-or-nothing."""
+        if all(s is not None for s in scales):
+            return cat(scales)
+        if any(s is not None for s in scales):
+            raise ValueError(
+                "fused projection group mixes quantized and fp32 frozen "
+                "tables; freeze with a single quantize mode")
+        return None
+
     qkv = [out.get(n) for n in ("q", "k", "v")]
     if all(_frozen_pair(d) for d in qkv):
         wrs = [d["wr"] for d in qkv]
         shapes = {w.shape[:-3] + w.shape[-2:] for w in wrs}
         if all(w.ndim >= 3 for w in wrs) and len(shapes) == 1:
-            out[FUSED_KEY] = {
+            fused = {
                 "wr": jnp.concatenate(wrs, axis=-3),
                 "wi": jnp.concatenate([d["wi"] for d in qkv], axis=-3),
             }
+            sc = _cat_scales([d.get("w_scale") for d in qkv],
+                             lambda ss: jnp.concatenate(ss, axis=-2))
+            if sc is not None:
+                fused["w_scale"] = sc
+            out[FUSED_KEY] = fused
             return True
         return False
     gates = []
@@ -328,7 +409,7 @@ def _attach_fused(out: Dict[str, Any]) -> bool:
     # pins k); q may differ (d_in vs d_proj)
     if len(xs) != 3 or len(rs) != 3 or xs[0] != rs[0] or xs[-1] != rs[-1]:
         return False
-    out[FUSED_KEY] = {
+    fused = {
         "wr": jnp.concatenate(
             [jnp.concatenate([px["wr"], pr["wr"]], axis=-2)
              for px, pr, _ in gates], axis=-3),
@@ -338,10 +419,19 @@ def _attach_fused(out: Dict[str, Any]) -> bool:
         "bias": jnp.concatenate(
             [b.reshape(-1).astype(jnp.float32) for _, _, b in gates]),
     }
+    sc = _cat_scales(
+        [s for px, pr, _ in gates
+         for s in (px.get("w_scale"), pr.get("w_scale"))],
+        lambda ss: jnp.concatenate(
+            [jnp.concatenate(ss[2 * i: 2 * i + 2], axis=-1)
+             for i in range(len(ss) // 2)], axis=-2))
+    if sc is not None:
+        fused["w_scale"] = sc
+    out[FUSED_KEY] = fused
     return True
 
 
-def freeze_params(specs, params) -> Dict[str, Any]:
+def freeze_params(specs, params, quantize: str = "off") -> Dict[str, Any]:
     """Replace every circulant table with its frozen frequency weights.
 
     Walks the ParamSpec tree (which tags circulant leaves — see
@@ -354,6 +444,16 @@ def freeze_params(specs, params) -> Dict[str, Any]:
     fused lstm/attention/ffn paths) detect the frozen entries and take the
     no-fft path without touching ``w``.
 
+    ``quantize="int8"`` stores the frozen tables int8 with a sibling
+    ``w_scale`` leaf — one symmetric f32 max-abs scale per (p, q) block,
+    shared over the K bins and the re/im pair (``quant.symmetric_scales``).
+    Resident table bytes drop ~4×; dequantization happens in-kernel (Pallas
+    path) or at trace entry (XLA ``dft``/``freq`` fallback), both bit-
+    identical to the fp32 path on dequantized tables. An already-frozen
+    fp32 tree re-frozen with ``"int8"`` quantizes in place (no new rfft);
+    an already-quantized tree is passed through unchanged under either
+    mode (``"off"`` never dequantizes — see :func:`dequantize_frozen`).
+
     Fused groups (attention Q/K/V, LSTM gates) additionally get a
     pre-concatenated stacked table under :data:`FUSED_KEY` — built here,
     eagerly, from the just-frozen per-projection tables (zero extra rfft
@@ -363,6 +463,7 @@ def freeze_params(specs, params) -> Dict[str, Any]:
     """
     from repro.nn.module import ParamSpec
 
+    _check_quantize(quantize)
     if isinstance(specs, ParamSpec) or not isinstance(specs, dict) \
             or not isinstance(params, dict):
         return params
@@ -374,7 +475,17 @@ def freeze_params(specs, params) -> Dict[str, Any]:
         if (isinstance(sub_spec, ParamSpec) and key == "w"
                 and "circulant" in getattr(sub_spec, "tags", ())):
             if "wr" in params and "wi" in params:   # already frozen
-                out["wr"], out["wi"] = params["wr"], params["wi"]
+                wr, wi = params["wr"], params["wi"]
+                if (quantize == "int8" and "w_scale" not in params
+                        and jnp.issubdtype(wr.dtype, jnp.floating)):
+                    # fp32-frozen checkpoint re-frozen quantized: no rfft,
+                    # just the int8 encode
+                    sc = symmetric_scales(wr, wi)
+                    out["w_scale"] = sc
+                    wr = quantize_symmetric(wr, sc)
+                    wi = quantize_symmetric(wi, sc)
+                    changed = True
+                out["wr"], out["wi"] = wr, wi
             else:
                 wr, wi = bc_ops.freq_weights(sub_param)
                 if "conv_taps" in sub_spec.tags:
@@ -385,21 +496,76 @@ def freeze_params(specs, params) -> Dict[str, Any]:
                     t, p, q, K = wr.shape
                     wr = wr.transpose(1, 0, 2, 3).reshape(p, t * q, K)
                     wi = wi.transpose(1, 0, 2, 3).reshape(p, t * q, K)
+                if quantize == "int8":
+                    # quantize AFTER any layout reshape so the (p, q) scale
+                    # grid matches the stored table's block grid
+                    sc = symmetric_scales(wr, wi)
+                    out["w_scale"] = sc
+                    wr = quantize_symmetric(wr, sc)
+                    wi = quantize_symmetric(wi, sc)
                 out["wr"], out["wi"] = wr, wi
                 changed = True
             if "w" in params:
                 dropped.add("w")
                 changed = True
         else:
-            new = freeze_params(sub_spec, sub_param)
+            new = freeze_params(sub_spec, sub_param, quantize)
             out[key] = new
             changed = changed or (new is not sub_param)
     # preserve params-only keys (already-frozen trees stay intact)
     for key in params:
-        if key not in out and key not in dropped:
-            out[key] = params[key]
+        if key in out or key in dropped:
+            continue
+        if (key == FUSED_KEY and quantize == "int8"
+                and isinstance(params[key], dict)
+                and "w_scale" not in params[key]):
+            # stale fp32 fused group over members just re-quantized above:
+            # drop it so _attach_fused rebuilds it from the int8 tables
+            changed = True
+            continue
+        out[key] = params[key]
     changed = _attach_fused(out) or changed
     return out if changed else params
+
+
+def frozen_table_bytes(params) -> int:
+    """Resident bytes of every frozen table in a param tree: all ``wr`` /
+    ``wi`` pairs (fused copies included — they are resident too) plus any
+    ``w_scale`` leaves. The serve-path quantization acceptance compares
+    this between an int8-frozen and an fp32-frozen tree (int8 lands at
+    ~0.25× + the per-block scale overhead, comfortably under the 0.55×
+    budget)."""
+    if not isinstance(params, dict):
+        return 0
+    n = 0
+    for key in ("wr", "wi", "w_scale"):
+        if key in params and hasattr(params[key], "nbytes"):
+            n += int(params[key].nbytes)
+    return n + sum(frozen_table_bytes(v) for v in params.values()
+                   if isinstance(v, dict))
+
+
+def dequantize_frozen(params):
+    """int8-frozen tree -> the equivalent fp32-frozen tree (oracle path).
+
+    Wherever a ``(wr, wi, w_scale)`` triple appears, replace the tables
+    with ``quant.dequantize_symmetric`` f32 pairs and drop the scale.
+    Feeding the result to a ``quantize="off"`` engine reproduces the int8
+    engine's outputs BIT-IDENTICALLY: the kernel's in-tile dequant computes
+    the same floats this function does, and everything downstream is the
+    same executable. Non-dict subtrees pass through untouched.
+    """
+    if not isinstance(params, dict):
+        return params
+    out = {}
+    for key, val in params.items():
+        if key == "w_scale" and "wr" in params:
+            continue
+        if key in ("wr", "wi") and "w_scale" in params:
+            out[key] = dequantize_symmetric(val, params["w_scale"])
+        else:
+            out[key] = dequantize_frozen(val)
+    return out
 
 
 def count_frozen_tables(params) -> int:

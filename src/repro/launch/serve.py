@@ -135,6 +135,11 @@ def main():
     ap.add_argument("--snapshot-every", default="",
                     help="steps between automatic snapshots (default 8; "
                          "needs --snapshot-dir)")
+    ap.add_argument("--quantize", choices=("off", "int8"), default="off",
+                    help="int8: freeze the circulant frequency tables as "
+                         "int8 with per-block scales (dequantized inside "
+                         "the kernel); halves resident table bytes at "
+                         "identical launch counts")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -187,7 +192,8 @@ def main():
                      "continuous engine (WaveEngine has no request "
                      "lifecycle)")
         engine = WaveEngine(model, cfg, params, batch=args.batch,
-                            cache_len=args.cache_len)
+                            cache_len=args.cache_len,
+                            quantize=args.quantize)
     else:
         try:
             engine = ServeEngine(model, cfg, params, batch=args.batch,
@@ -201,7 +207,8 @@ def main():
                                  shed_policy=args.shed_policy,
                                  snapshot_dir=snapshot_dir,
                                  snapshot_every=(snapshot_every
-                                                 if snapshot_dir else 0))
+                                                 if snapshot_dir else 0),
+                                 quantize=args.quantize)
         except ValueError as e:
             if "_buckets" in str(e):
                 ap.error(str(e))
@@ -214,6 +221,9 @@ def main():
         if args.prewarm:
             n = engine.prewarm()
             print(f"prewarmed {n} executables")
+    if args.quantize != "off":
+        print(f"quantize={args.quantize}: frozen table bytes = "
+              f"{engine.frozen_table_bytes()}")
 
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)

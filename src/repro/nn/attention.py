@@ -270,6 +270,7 @@ class Attention:
             return circ.block_circulant_apply_multi(
                 x, None, impl=self.cfg.swm.impl,
                 w_freq_cat=(fused["wr"], fused["wi"]),
+                w_scale_cat=fused.get("w_scale"),
                 splits=tuple(p.out_dim // kb for p in (qp, kp, vp)),
                 k=kb, karatsuba=self.cfg.swm.karatsuba,
             )
@@ -279,8 +280,11 @@ class Attention:
             x,
             None if frozen else [params[n]["w"] for n in names],
             impl=self.cfg.swm.impl,
-            w_freqs=([(params[n]["wr"], params[n]["wi"]) for n in names]
-                     if frozen else None),
+            # int8 per-projection tables dequantize here (the multi path
+            # concatenates to complex64, which must see f32 tables)
+            w_freqs=([circ.dequantize_freq_pair(
+                params[n]["wr"], params[n]["wi"], params[n].get("w_scale"))
+                for n in names] if frozen else None),
             k=kb,
             karatsuba=self.cfg.swm.karatsuba,
         )

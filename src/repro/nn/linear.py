@@ -109,7 +109,8 @@ class Linear:
                 x, params.get("w"), impl=self.swm.impl,
                 karatsuba=self.swm.karatsuba,
                 bias=bias, activation=activation,
-                w_freq=self.frozen_freq(params), k=self.block_size,
+                w_freq=self.frozen_freq(params),
+                w_scale=self.frozen_scale(params), k=self.block_size,
             )
         w = params["w"]
         y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
@@ -123,6 +124,12 @@ class Linear:
         """(wr, wi) when frozen frequency weights are attached, else None."""
         if self.is_circulant and "wr" in params and "wi" in params:
             return (params["wr"], params["wi"])
+        return None
+
+    def frozen_scale(self, params):
+        """Per-block int8 scales when the frozen tables are quantized."""
+        if self.is_circulant and "wr" in params:
+            return params.get("w_scale")
         return None
 
     # convenience for param counting / compression reporting

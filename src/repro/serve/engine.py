@@ -681,7 +681,8 @@ class ServeEngine:
                  snapshot_dir: Optional[str] = None,
                  snapshot_every: int = 0,
                  fault_injector=None,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 quantize: str = "off"):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine supports decoder-LM families; enc-dec serving "
@@ -695,10 +696,16 @@ class ServeEngine:
                 f"snapshot_every must be >= 0, got {snapshot_every}")
         if int(snapshot_every) > 0 and snapshot_dir is None:
             raise ValueError("snapshot_every needs snapshot_dir")
+        from repro.kernels.block_circulant.plan import (_check_quantize,
+                                                        freeze_params)
+        _check_quantize(quantize)
+        if quantize != "off" and not cfg.swm.enabled:
+            raise ValueError(
+                "quantize applies to frozen circulant tables; this config "
+                "has swm disabled")
         if cfg.swm.enabled:
-            from repro.kernels.block_circulant.plan import freeze_params
-
-            params = freeze_params(model.specs(), params)
+            params = freeze_params(model.specs(), params, quantize=quantize)
+        self.quantize = quantize
         self.model, self.cfg, self.params = model, cfg, params
         self.batch, self.cache_len = int(batch), int(cache_len)
         self.policy = policy
@@ -1539,7 +1546,16 @@ class ServeEngine:
             "vocab": int(self.cfg.vocab),
             "max_queue": self.max_queue,
             "shed_policy": self.shed_policy,
+            "quantize": self.quantize,
         }
+
+    def frozen_table_bytes(self) -> int:
+        """Resident bytes of the frozen frequency tables (incl. fused
+        copies and quantization scales) — the quantization acceptance
+        metric (int8 ≤ 0.55× fp32)."""
+        from repro.kernels.block_circulant.plan import frozen_table_bytes
+
+        return frozen_table_bytes(self.params)
 
     def snapshot(self) -> str:
         """Serialize the COMPLETE serving state — KV cache, slot table,
@@ -1743,14 +1759,20 @@ class WaveEngine:
     """
 
     def __init__(self, model, cfg: ModelConfig, params, batch: int,
-                 cache_len: int):
+                 cache_len: int, *, quantize: str = "off"):
         if int(batch) > 1:
             # a wave of one never pads; larger waves pad to the wave max
             _reject_recurrent_mixers(cfg, "wave prefill")
+        from repro.kernels.block_circulant.plan import (_check_quantize,
+                                                        freeze_params)
+        _check_quantize(quantize)
+        if quantize != "off" and not cfg.swm.enabled:
+            raise ValueError(
+                "quantize applies to frozen circulant tables; this config "
+                "has swm disabled")
         if cfg.swm.enabled:
-            from repro.kernels.block_circulant.plan import freeze_params
-
-            params = freeze_params(model.specs(), params)
+            params = freeze_params(model.specs(), params, quantize=quantize)
+        self.quantize = quantize
         self.model, self.cfg, self.params = model, cfg, params
         self.batch, self.cache_len = int(batch), int(cache_len)
         self.stats = EngineStats()
@@ -1764,6 +1786,12 @@ class WaveEngine:
     @property
     def decode_compiles(self) -> int:
         return int(self._decode._cache_size())
+
+    def frozen_table_bytes(self) -> int:
+        """Resident bytes of the frozen frequency tables (scales included)."""
+        from repro.kernels.block_circulant.plan import frozen_table_bytes
+
+        return frozen_table_bytes(self.params)
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Greedy-decode a list of requests in fixed batched waves."""

@@ -57,9 +57,27 @@ def make_loss_fn(model, cfg: ModelConfig, tcfg: TrainConfig):
        lm:     {"tokens": (B, S+1)}
        vlm:    {"tokens": (B, S+1), "img": (B, P, D)}
        encdec: {"frames": (B, T, D), "tokens": (B, S+1)}
+
+    ``tcfg.qat_bits > 0`` turns on quantization-aware training: every
+    forward sees fake-quantized parameters (clipped-STE ``fixed_point``
+    through ``quantize_tree`` — complex frozen tables included), while the
+    optimizer updates the full-precision master copy. Biases and norm
+    scales stay fp32 (``quant.default_exempt``): their dynamic range is
+    unrelated to the weight rails. This is the training half of the
+    paper's fixed-point results — the serve-time int8 freeze
+    (``plan.freeze_params(quantize="int8")``) is the deploy half.
     """
+    qat_bits = int(getattr(tcfg, "qat_bits", 0) or 0)
+    qat_frac = int(getattr(tcfg, "qat_frac_bits", -1))
+    if qat_frac < 0:
+        qat_frac = qat_bits - 4
 
     def loss_fn(params, batch):
+        if qat_bits:
+            from repro.core.quant import default_exempt, quantize_tree
+
+            params = quantize_tree(params, qat_bits, qat_frac,
+                                   exempt=default_exempt)
         tokens = batch["tokens"]
         inp, labels = tokens[:, :-1], tokens[:, 1:]
         kwargs = {}

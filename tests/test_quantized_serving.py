@@ -1,0 +1,493 @@
+"""int8-quantized frozen frequency tables, end to end.
+
+The quantization contract under test: ``freeze_params(quantize="int8")``
+stores the frozen rfft(w) tables as int8 with one f32 symmetric scale per
+(p, q) block (shared across the K bins and the re/im parts), and every
+consumer — the Pallas kernel (dequant on the VMEM tile), the XLA freq
+path, fused QKV/LSTM groups, the serving engines — produces outputs
+BIT-identical to running the host-dequantized fp32 tables through the
+fp32 path. int8 -> f32 * scale is exact, so quantized serving is not an
+approximation of the fake-quantized weights; it IS them, at ~0.35x the
+resident table bytes and an unchanged launch/compile budget.
+
+Also pins the three quantization-path bugfixes that rode along:
+``quantize_tree`` quantizing complex leaves (they used to escape the
+float-dtype check) while exempting biases/norm scales; the dist
+compressor preserving bf16 gradient dtypes through decompress and error
+feedback; and the QAT train loop fake-quantizing params inside the loss.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SWMConfig, TrainConfig
+from repro.core.quant import (default_exempt, dequantize_symmetric,
+                              fake_quant_symmetric, fixed_point,
+                              quantize_symmetric, quantize_tree,
+                              symmetric_scales)
+from repro.kernels.block_circulant import (block_circulant_matmul,
+                                           build_plan, freq_weights)
+from repro.kernels.block_circulant.ops import count_pallas_launches
+from repro.kernels.block_circulant.plan import (FUSED_KEY, dequantize_frozen,
+                                                freeze_params,
+                                                frozen_table_bytes)
+from repro.kernels.block_circulant.ref import block_circulant_matmul_ref
+from repro.models.decoder import HybridDecoderLM
+from repro.nn.module import init_params
+from repro.serve.engine import Request, ServeEngine, WaveEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# 1. In-kernel int8 dequant vs the fake-quant fp32 oracle (conformance grid)
+# ---------------------------------------------------------------------------
+
+# odd k (5), non-power-of-two k (12), k=1 degenerate blocks, B=1 rows
+GRID = [(1, 1, 1, 5), (4, 2, 3, 8), (1, 5, 2, 12), (4, 2, 2, 1),
+        (4, 3, 5, 8)]
+
+
+@pytest.mark.parametrize("B,p,q,k", GRID)
+def test_int8_kernel_matches_fake_quant_oracle(B, p, q, k):
+    """The kernel consuming int8 tables + scales must equal, bit for bit,
+    the fp32 kernel consuming the host-dequantized tables — same scales,
+    same values, only the dequant site differs."""
+    x = _rand((B, q * k), seed=0)
+    w = _rand((p, q, k), seed=1) * (q * k) ** -0.5
+    wr, wi = freq_weights(w)
+    scale = symmetric_scales(wr, wi)
+    qr, qi = quantize_symmetric(wr, scale), quantize_symmetric(wi, scale)
+
+    y_q = block_circulant_matmul(x, None, w_freq=(qr, qi), w_scale=scale,
+                                 k=k, q=q)
+    y_o = block_circulant_matmul(
+        x, None,
+        w_freq=(dequantize_symmetric(qr, scale),
+                dequantize_symmetric(qi, scale)),
+        k=k, q=q)
+    assert y_q.shape == (B, p * k)
+    assert bool(jnp.array_equal(y_q, y_o)), (
+        "in-kernel dequant diverged from the host-dequantized oracle")
+    # and loosely close to the unquantized dense reference (8-bit tables)
+    y_ref = block_circulant_matmul_ref(x, w)
+    rel = float(jnp.max(jnp.abs(y_q - y_ref))
+                / jnp.maximum(jnp.max(jnp.abs(y_ref)), 1e-6))
+    assert rel < 0.05, f"int8 tables are {rel:.3f} off the fp32 reference"
+
+
+def test_fake_quant_symmetric_matches_storage_roundtrip():
+    """fake_quant_symmetric (the QAT forward) and the int8 storage
+    round-trip must land on identical values — training sees exactly what
+    serving will load."""
+    wr, wi = freq_weights(_rand((3, 4, 8), seed=2))
+    fr, fi, scale = fake_quant_symmetric(wr, wi)
+    qr, qi = quantize_symmetric(wr, scale), quantize_symmetric(wi, scale)
+    assert bool(jnp.array_equal(fr, dequantize_symmetric(qr, scale)))
+    assert bool(jnp.array_equal(fi, dequantize_symmetric(qi, scale)))
+
+
+# ---------------------------------------------------------------------------
+# 2. Quantized plans: bitwise oracle match, launch parity, bytes, no fft
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,p,q,k", [(4, 3, 5, 8), (7, 2, 3, 12)])
+def test_quantized_plan_bitwise_and_structural(B, p, q, k):
+    x = _rand((B, q * k), seed=0)
+    w = _rand((p, q, k), seed=1) * (q * k) ** -0.5
+    b = _rand((p * k,), seed=2)
+    plan_f = build_plan(w, bias=b, activation="relu")
+    plan_q = build_plan(w, bias=b, activation="relu", quantize="int8")
+    assert plan_q.quantized and not plan_f.quantized
+    assert plan_q.wr.dtype == jnp.int8 and plan_q.scale.dtype == jnp.float32
+
+    plan_o = dataclasses.replace(
+        plan_q,
+        wr=dequantize_symmetric(plan_q.wr, plan_q.scale),
+        wi=dequantize_symmetric(plan_q.wi, plan_q.scale),
+        scale=None,
+    )
+    y_q, y_o = plan_q.apply(x), plan_o.apply(x)
+    assert bool(jnp.array_equal(y_q, y_o))
+
+    jp_q = jax.make_jaxpr(plan_q.apply)(x)
+    assert count_pallas_launches(jp_q) == count_pallas_launches(
+        jax.make_jaxpr(plan_f.apply)(x)), "dequant must not add a launch"
+    assert "fft" not in str(jp_q)
+    ratio = plan_q.table_bytes() / plan_f.table_bytes()
+    assert ratio <= 0.55, f"int8 tables at {ratio:.3f}x fp32 bytes"
+
+
+def test_build_plan_rejects_unknown_quantize_mode():
+    w = _rand((2, 2, 8))
+    with pytest.raises(ValueError, match="quantize"):
+        build_plan(w, quantize="int4")
+
+
+# ---------------------------------------------------------------------------
+# 3. Fused frozen groups (attention QKV, LSTM gates) with scales
+# ---------------------------------------------------------------------------
+
+
+def _attn_cfg(impl="dft"):
+    return ModelConfig(name="quant-fuse", n_layers=2, d_model=32, n_heads=2,
+                       n_kv_heads=1, head_dim=16, d_ff=64, vocab=48,
+                       remat="none", param_dtype="float32",
+                       compute_dtype="float32",
+                       swm=SWMConfig(block_size=8, impl=impl))
+
+
+@pytest.mark.parametrize("impl", ["dft", "pallas"])
+def test_quantized_freeze_fuses_attention_qkv(impl):
+    """int8 freeze pre-concatenates the Q/K/V tables AND their per-block
+    scales (scales are per-(p, q) block, so concatenation along p commutes
+    with quantization): the fused launch is bit-identical to the
+    per-projection quantized path and close to the fp32 frozen path."""
+    from repro.nn.attention import Attention
+
+    att = Attention(_attn_cfg(impl))
+    params = init_params(att.specs(), 0)
+    frozen_f = freeze_params(att.specs(), params)
+    frozen_q = freeze_params(att.specs(), params, quantize="int8")
+    fused = frozen_q[FUSED_KEY]
+    assert fused["wr"].dtype == jnp.int8
+    assert fused["w_scale"].shape == fused["wr"].shape[:-1]
+
+    x = _rand((2, 3, 32), seed=1)
+    pos = jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32), (2, 3))
+    y_fused, _ = att(frozen_q, x, pos)
+    nofuse = {k: v for k, v in frozen_q.items() if k != FUSED_KEY}
+    y_perproj, _ = att(nofuse, x, pos)
+    assert bool(jnp.all(y_fused == y_perproj)), (
+        "fused quantized QKV diverged from the per-projection path")
+    y_f32, _ = att(frozen_f, x, pos)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_f32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_quantized_freeze_fuses_lstm_gates():
+    from repro.core.lstm import SWMLSTM
+
+    lstm = SWMLSTM(d_in=16, d_cell=32, d_proj=16,
+                   swm=SWMConfig(block_size=8, impl="dft",
+                                 targets=("attn", "ffn", "lstm")))
+    params = init_params(lstm.specs(), 0)
+    frozen_q = freeze_params(lstm.specs(), params, quantize="int8")
+    fused = frozen_q[FUSED_KEY]
+    assert fused["wr"].dtype == jnp.int8
+    # 4 gates x (dc/k = 4) stacked along p; (di + dp)/k = 4 along q
+    assert fused["w_scale"].shape == (16, 4)
+
+    xs = _rand((2, 4, 16), seed=2)
+    y_fused, _ = lstm(frozen_q, xs)
+    nofuse = {k: v for k, v in frozen_q.items() if k != FUSED_KEY}
+    y_perproj, _ = lstm(nofuse, xs)
+    assert bool(jnp.all(y_fused == y_perproj)), (
+        "fused quantized LSTM gates diverged from the per-gate path")
+
+
+def test_requantize_already_frozen_tree_rebuilds_fused():
+    """Freezing fp32 first and re-freezing with quantize="int8" must
+    quantize the existing tables in place (no new rfft) and rebuild the
+    fused group with scales — a stale fp32 fused entry would silently
+    serve unquantized weights."""
+    from repro.nn.attention import Attention
+
+    att = Attention(_attn_cfg("dft"))
+    params = init_params(att.specs(), 0)
+    frozen_f = freeze_params(att.specs(), params)
+    frozen_q = freeze_params(att.specs(), frozen_f, quantize="int8")
+    assert frozen_q[FUSED_KEY]["wr"].dtype == jnp.int8
+    assert "w_scale" in frozen_q[FUSED_KEY]
+    # matches quantizing the raw tree directly
+    direct = freeze_params(att.specs(), params, quantize="int8")
+    x = _rand((2, 3, 32), seed=1)
+    pos = jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32), (2, 3))
+    y_a, _ = att(frozen_q, x, pos)
+    y_b, _ = att(direct, x, pos)
+    assert bool(jnp.all(y_a == y_b))
+    # idempotent under both modes; "off" never silently dequantizes
+    assert freeze_params(att.specs(), frozen_q, quantize="int8") is frozen_q
+    assert freeze_params(att.specs(), frozen_q) is frozen_q
+
+
+def test_dequantize_frozen_roundtrip_and_bytes():
+    from repro.nn.attention import Attention
+
+    att = Attention(_attn_cfg("dft"))
+    params = init_params(att.specs(), 0)
+    frozen_f = freeze_params(att.specs(), params)
+    frozen_q = freeze_params(att.specs(), params, quantize="int8")
+    ratio = frozen_table_bytes(frozen_q) / frozen_table_bytes(frozen_f)
+    assert ratio <= 0.55, f"quantized tree at {ratio:.3f}x fp32 bytes"
+    deq = dequantize_frozen(frozen_q)
+    for name in ("q", "k", "v", "o"):
+        assert "w_scale" not in deq[name]
+        assert deq[name]["wr"].dtype == jnp.float32
+        want = dequantize_symmetric(frozen_q[name]["wr"],
+                                    frozen_q[name]["w_scale"])
+        assert bool(jnp.array_equal(deq[name]["wr"], want))
+
+
+# ---------------------------------------------------------------------------
+# 4. quantize_tree bugfix: complex leaves quantize, biases/norms exempt
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_tree_quantizes_complex_leaves():
+    """Regression: complex64 leaves used to escape the floating-dtype
+    check and pass through unquantized — frozen frequency tables were
+    silently exempt from QAT."""
+    wf = jnp.asarray([0.3 + 0.7j, -1.13 - 0.01j], jnp.complex64)
+    tree = {"wf": wf, "w": jnp.asarray([0.3, -1.13], jnp.float32)}
+    q = quantize_tree(tree, 8, 4)
+    assert q["wf"].dtype == jnp.complex64
+    want = (fixed_point(jnp.real(wf), 8, 4)
+            + 1j * fixed_point(jnp.imag(wf), 8, 4)).astype(jnp.complex64)
+    assert bool(jnp.array_equal(q["wf"], want))
+    assert not bool(jnp.array_equal(q["wf"], wf)), (
+        "complex leaf passed through unquantized")
+    assert bool(jnp.array_equal(q["w"], fixed_point(tree["w"], 8, 4)))
+
+
+def test_quantize_tree_exempts_biases_and_norm_scales():
+    tree = {
+        "lin": {"w": jnp.asarray([0.33], jnp.float32),
+                "bias": jnp.asarray([0.333], jnp.float32)},
+        "norm": {"scale": jnp.asarray([1.001], jnp.float32)},
+        "lstm": {"bi": jnp.asarray([0.123], jnp.float32),
+                 "out_b": jnp.asarray([0.321], jnp.float32)},
+    }
+    q = quantize_tree(tree, 8, 4, exempt=default_exempt)
+    assert bool(jnp.array_equal(q["lin"]["bias"], tree["lin"]["bias"]))
+    assert bool(jnp.array_equal(q["norm"]["scale"], tree["norm"]["scale"]))
+    assert bool(jnp.array_equal(q["lstm"]["bi"], tree["lstm"]["bi"]))
+    assert bool(jnp.array_equal(q["lstm"]["out_b"], tree["lstm"]["out_b"]))
+    assert not bool(jnp.array_equal(q["lin"]["w"], tree["lin"]["w"]))
+
+
+def test_quantize_tree_ste_gradient_flows():
+    """Clipped STE: in-range leaves pass unit gradient through the
+    quantizer (positional-arg form kept for callers predating exempt)."""
+    tree = {"w": jnp.asarray([0.1, -0.2, 0.3], jnp.float32)}
+    g = jax.grad(lambda t: quantize_tree(t, 12, 8)["w"].sum())(tree)
+    assert bool(jnp.array_equal(g["w"], jnp.ones(3)))
+
+
+# ---------------------------------------------------------------------------
+# 5. dist compressor bugfix: bf16 dtype preserved, EF still telescopes
+# ---------------------------------------------------------------------------
+
+
+def test_compress_roundtrip_preserves_bf16():
+    from repro.dist.compress import int8_compress, int8_decompress
+
+    g = _rand((33,), seed=3).astype(jnp.bfloat16)
+    q, s = int8_compress(g)
+    out = int8_decompress(q, s, g.shape, g.size, dtype=g.dtype)
+    assert out.dtype == jnp.bfloat16, (
+        "decompress promoted the gradient tree to f32")
+
+
+def test_error_feedback_preserves_dtype_and_telescopes():
+    from repro.dist.compress import apply_error_feedback
+
+    gs = [_rand((64,), seed=10 + i).astype(jnp.bfloat16) for i in range(6)]
+    residual = jnp.zeros((64,), jnp.bfloat16)
+    total_tx = jnp.zeros((64,), jnp.float32)
+    for g in gs:
+        tx, residual = apply_error_feedback(g, residual)
+        assert tx.dtype == jnp.bfloat16 and residual.dtype == jnp.bfloat16
+        total_tx = total_tx + tx.astype(jnp.float32)
+    total_g = sum(g.astype(jnp.float32) for g in gs)
+    # Σ tx + residual_T == Σ g up to bf16 storage error per step
+    np.testing.assert_allclose(
+        np.asarray(total_tx + residual.astype(jnp.float32)),
+        np.asarray(total_g), atol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# 6. Serving engines: int8 vs dequantized oracle, fingerprints, guards
+# ---------------------------------------------------------------------------
+
+BATCH, CACHE = 2, 32
+
+
+def _serve_cfg(**kw):
+    base = dict(name="quant-serve", n_layers=2, d_model=32, n_heads=2,
+                n_kv_heads=1, head_dim=16, d_ff=64, vocab=48, remat="none",
+                param_dtype="float32", compute_dtype="float32",
+                swm=SWMConfig(block_size=8, impl="dft"))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _mix(seed, n, vocab=48):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rng.integers(0, vocab,
+                             size=int(rng.integers(1, 11))).astype(np.int32),
+                max_new=int(rng.integers(1, 7)))
+        for _ in range(n)
+    ]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = _serve_cfg()
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+    return cfg, model, params
+
+
+def test_engine_int8_matches_dequantized_oracle(lm):
+    cfg, model, params = lm
+    reqs = _mix(0, 6)
+    eng_f = ServeEngine(model, cfg, params, batch=BATCH, cache_len=CACHE)
+    eng_q = ServeEngine(model, cfg, params, batch=BATCH, cache_len=CACHE,
+                        quantize="int8")
+    oracle = ServeEngine(model, cfg, dequantize_frozen(eng_q.params),
+                         batch=BATCH, cache_len=CACHE)
+    outs_f = eng_f.generate(reqs)
+    outs_q = eng_q.generate(reqs)
+    outs_o = oracle.generate(reqs)
+    assert outs_q == outs_o, (
+        "int8 engine diverged from its dequantized-table oracle")
+    assert eng_q.prefill_compiles == eng_f.prefill_compiles
+    assert eng_q.decode_compiles == eng_f.decode_compiles
+    ratio = eng_q.frozen_table_bytes() / eng_f.frozen_table_bytes()
+    assert ratio <= 0.55, f"engine tables at {ratio:.3f}x fp32 bytes"
+
+
+def test_wave_engine_int8_matches_dequantized_oracle(lm):
+    cfg, model, params = lm
+    reqs = _mix(1, 4)
+    q = WaveEngine(model, cfg, params, batch=BATCH, cache_len=CACHE,
+                   quantize="int8")
+    oracle = WaveEngine(model, cfg, dequantize_frozen(q.params),
+                        batch=BATCH, cache_len=CACHE)
+    assert q.generate(reqs) == oracle.generate(reqs)
+    fp = WaveEngine(model, cfg, params, batch=BATCH, cache_len=CACHE)
+    assert q.frozen_table_bytes() <= 0.55 * fp.frozen_table_bytes()
+
+
+def test_engine_rejects_bad_quantize_args(lm):
+    cfg, model, params = lm
+    with pytest.raises(ValueError, match="quantize"):
+        ServeEngine(model, cfg, params, batch=BATCH, cache_len=CACHE,
+                    quantize="int4")
+    cfg_off = _serve_cfg(swm=SWMConfig(block_size=0))
+    model_off = HybridDecoderLM(cfg_off)
+    params_off = init_params(model_off.specs(), 0)
+    with pytest.raises(ValueError, match="swm"):
+        ServeEngine(model_off, cfg_off, params_off, batch=BATCH,
+                    cache_len=CACHE, quantize="int8")
+
+
+def test_snapshot_refuses_cross_quantize_restore(lm, tmp_path):
+    """The engine fingerprint carries the quantize mode: a snapshot taken
+    by an fp32 engine must not restore into an int8 engine (the KV cache
+    is valid, but silently swapping table precision mid-stream would
+    change outputs)."""
+    cfg, model, params = lm
+    eng = ServeEngine(model, cfg, params, batch=BATCH, cache_len=CACHE,
+                      snapshot_dir=str(tmp_path))
+    eng.submit(_mix(2, 1)[0])
+    eng.snapshot()
+    other = ServeEngine(model, cfg, params, batch=BATCH, cache_len=CACHE,
+                        snapshot_dir=str(tmp_path), quantize="int8")
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.restore()
+
+
+# ---------------------------------------------------------------------------
+# 7. Chaos: snapshot/restore mid-stream with quantized tables
+# ---------------------------------------------------------------------------
+
+
+def _drive(eng, max_steps=500):
+    steps = 0
+    while eng.step():
+        steps += 1
+        assert steps < max_steps, "engine did not go idle: hang"
+    return steps
+
+
+def test_quantized_snapshot_restore_resumes_mid_stream(lm, tmp_path):
+    """Quantized engines snapshot only cache + metadata (never params):
+    the twin rebuilds its int8 tables deterministically at construction
+    and must resume every in-flight request bit-identically."""
+    cfg, model, params = lm
+    reqs = _mix(5, 5)
+    eng = ServeEngine(model, cfg, params, batch=BATCH, cache_len=CACHE,
+                      snapshot_dir=str(tmp_path), quantize="int8")
+    rids = [eng.submit(r) for r in reqs]
+    for _ in range(3):
+        eng.step()                   # decode a few tokens mid-stream
+    eng.snapshot()
+    assert eng.stats.snapshots == 1
+    _drive(eng)
+    want = {rid: eng.poll(rid) for rid in rids}
+
+    twin = ServeEngine(model, cfg, params, batch=BATCH, cache_len=CACHE,
+                       snapshot_dir=str(tmp_path), quantize="int8")
+    twin.restore()
+    assert twin.stats.recoveries == 1
+    _drive(twin)
+    for rid in rids:
+        got = twin.poll(rid)
+        assert got.status == want[rid].status
+        assert got.tokens == want[rid].tokens, (
+            "restored quantized engine diverged mid-stream")
+    assert not twin._active.any() and len(twin._sched) == 0
+
+
+# ---------------------------------------------------------------------------
+# 8. QAT train-step smoke
+# ---------------------------------------------------------------------------
+
+
+def test_qat_train_step_smoke():
+    """One QAT train step on the tiny LM: quantization actually happens
+    (fake-quantized loss differs from fp32), loss and grads stay finite,
+    and the fp32 master copy keeps updating off-grid values."""
+    from repro.train.loop import init_train_state, make_loss_fn, \
+        make_train_step
+
+    cfg = _serve_cfg(name="quant-train")
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 48, size=(2, 9)), jnp.int32)
+    batch = {"tokens": tokens}
+
+    tcfg_fp = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=4)
+    tcfg_q = dataclasses.replace(tcfg_fp, qat_bits=8)
+    loss_fp, _ = make_loss_fn(model, cfg, tcfg_fp)(params, batch)
+    loss_q, _ = make_loss_fn(model, cfg, tcfg_q)(params, batch)
+    assert np.isfinite(float(loss_q))
+    assert float(loss_q) != float(loss_fp), (
+        "qat_bits=8 produced the fp32 loss: fake quantization never ran")
+
+    step = make_train_step(model, cfg, tcfg_q)
+    state = init_train_state(params, tcfg_q)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    state, _ = step(state, batch)      # step 2: past the LR warmup ramp
+    # the fp32 master copy keeps updating (QAT never freezes the weights)
+    moved = any(
+        not bool(jnp.array_equal(a, b))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(state["params"]))
+    )
+    assert moved, "params did not update"
