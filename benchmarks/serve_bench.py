@@ -47,6 +47,17 @@ asserts the quantized-serving contract: int8 greedy outputs bit-identical
 to the oracle, resident frozen-table bytes at most 0.55x fp32, compile
 budget unchanged.
 
+A sixth workload, ``families``, serves the mixed traffic through three
+model families behind their :class:`~repro.serve.runner.ModelRunner`
+implementations — an attention decoder (``DecoderRunner``), an RWKV
+recurrent stack (``RecurrentRunner``) and a capacity-bucketed MoE decoder
+— and reports tokens/sec per family while asserting the cross-family
+serving contract: every family stays inside its engine's compile budget,
+and the recurrent family's bucketed greedy outputs are bit-identical to
+the unbucketed B=1 loop through the same runner (the pad-invariance
+guarantee that makes left-padded bucketed prefill legal for stateful
+mixers).
+
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --json out.json
     PYTHONPATH=src python benchmarks/serve_bench.py --quick --workload tail \
         --json out_tail.json
@@ -140,7 +151,124 @@ def _workload_prefix(n_requests: int, cache_len: int, seed: int):
 
 WORKLOADS = {"mixed": _workload_mixed, "tail": _workload_tail,
              "prefix": _workload_prefix, "chaos": _workload_mixed,
-             "quantize": _workload_mixed}
+             "quantize": _workload_mixed, "families": _workload_mixed}
+
+
+def _run_families(n_requests, batch, cache_len, seed, json_path):
+    """Families workload: the same seeded mixed traffic served through
+    three model families behind their ModelRunner implementations —
+    an attention decoder (DecoderRunner), an RWKV recurrent stack
+    (RecurrentRunner) and a capacity-bucketed no-drop MoE decoder.
+    Reports tokens/sec per family and asserts the cross-family serving
+    contract: each family's engine stays inside its compile budget, and
+    the recurrent family's bucketed greedy outputs are bit-identical to
+    the unbucketed B=1 loop through the same runner."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import LayerGroup, LayerSpec
+    from repro.launch.specs import build_model
+    from repro.serve.runner import make_runner
+
+    base = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                vocab=128, remat="none", param_dtype="float32",
+                compute_dtype="float32",
+                swm=SWMConfig(block_size=8, impl="dft"))
+    fams = {
+        "decoder": ModelConfig(name="fam-decoder", n_layers=2, **base),
+        "rwkv": ModelConfig(
+            name="fam-rwkv", n_layers=2, rwkv_head_dim=16,
+            rwkv_decay_lora=8, rwkv_mix_lora=8,
+            groups=(LayerGroup(layers=(
+                LayerSpec(mixer="rwkv", ffn="dense"),), repeat=2),),
+            **base),
+        "moe": ModelConfig(
+            name="fam-moe", n_layers=2, n_experts=4, n_experts_per_token=2,
+            d_ff_expert=128,
+            groups=(LayerGroup(layers=(
+                LayerSpec(mixer="attn", ffn="moe"),), repeat=2),),
+            **base),
+    }
+    reqs = _workload_mixed(n_requests, cache_len, seed)
+    warmup = _workload_mixed(max(4, n_requests // 4), cache_len, seed + 1)
+    rows = {}
+    rwkv_ctx = None
+    for fam, cfg in fams.items():
+        model = build_model(cfg)
+        params = init_params(model.specs(), 0)
+        eng = ServeEngine(model, cfg, params, batch=batch,
+                          cache_len=cache_len)
+        eng.prewarm()
+        outs, row = _run(eng, warmup, reqs)
+        assert eng.prefill_compiles <= eng.max_prefill_variants, (
+            f"{fam}: prefill compile budget blown "
+            f"({eng.prefill_compiles} > {eng.max_prefill_variants})")
+        assert eng.decode_compiles <= eng.max_decode_variants, (
+            f"{fam}: decode compile budget blown "
+            f"({eng.decode_compiles} > {eng.max_decode_variants})")
+        row["runner"] = type(eng.runner).__name__
+        row["max_prefill_variants"] = eng.max_prefill_variants
+        row["max_decode_variants"] = eng.max_decode_variants
+        rows[fam] = row
+        if fam == "rwkv":
+            rwkv_ctx = (outs, eng.params, model, cfg)
+
+    # pad-invariance: the recurrent family's bucketed engine outputs must
+    # match the unbucketed B=1 loop through the same runner bit for bit
+    outs_r, params_r, model_r, cfg_r = rwkv_ctx
+    runner = make_runner(model_r, cfg_r, cache_len)
+    check = reqs[:min(6, len(reqs))]
+    prefill = jax.jit(runner.prefill)
+    decode = jax.jit(runner.decode)
+    ref = []
+    for r in check:
+        p = np.asarray(r.prompt, np.int32).reshape(-1)
+        L = p.shape[0]
+        state = runner.init_state(1)
+        lg, _, state = prefill(
+            params_r, jnp.asarray(p)[None],
+            jnp.asarray(np.arange(L, dtype=np.int32))[None],
+            state, jnp.asarray([0], np.int32))
+        cur = int(np.argmax(np.asarray(lg)[0]))
+        out, pos = [cur], L
+        while len(out) < r.max_new:
+            lg, _, state = decode(
+                params_r, jnp.asarray([[cur]], np.int32), state,
+                jnp.asarray([pos], np.int32), jnp.asarray([0], np.int32))
+            cur = int(np.argmax(np.asarray(lg)[0]))
+            out.append(cur)
+            pos += 1
+        ref.append(out)
+    assert outs_r[:len(check)] == ref, (
+        "rwkv bucketed serving diverged from the unbucketed B=1 runner "
+        "loop: recurrent pad-invariance broken")
+
+    report = {
+        "workload": {"name": "families", "n_requests": n_requests,
+                     "batch": batch, "cache_len": cache_len, "seed": seed,
+                     "host": "cpu-interpret"},
+        "families": rows,
+        "recurrent_bucketed_equals_b1": True,
+        "compile_budget_ok": True,
+    }
+    for fam, row in rows.items():
+        emit(f"serve/family_{fam}_B{batch}_N{n_requests}",
+             row["seconds"] * 1e6,
+             f"runner={row['runner']};tok_s={row['tokens_per_sec']:.1f};"
+             f"tok_per_decode_step={row['tokens_per_decode_step']:.2f};"
+             f"prefill_compiles={row['prefill_compiles']}"
+             f"<={row['max_prefill_variants']};"
+             f"decode_compiles={row['decode_compiles']}"
+             f"<={row['max_decode_variants']};host=cpu")
+    emit("serve/families", 0.0,
+         "recurrent_bucketed_equals_b1=True;compile_budget_ok=True;"
+         + ";".join(f"{f}_tok_s={r['tokens_per_sec']:.1f}"
+                    for f, r in rows.items()))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+    return report
 
 
 def _run_chaos(n_requests, batch, cache_len, seed, json_path):
@@ -515,6 +643,8 @@ def run(n_requests: int = 32, batch: int = 4, cache_len: int = 64,
         seed: int = 0, workload: str = "mixed", json_path: str = ""):
     if workload == "chaos":
         return _run_chaos(n_requests, batch, cache_len, seed, json_path)
+    if workload == "families":
+        return _run_families(n_requests, batch, cache_len, seed, json_path)
     cfg = _cfg()
     model = HybridDecoderLM(cfg)
     params = init_params(model.specs(), 0)
@@ -615,7 +745,11 @@ def main():
                          "faults, asserting the fault-tolerance contract; "
                          "quantize: mixed traffic through fp32 vs int8 "
                          "frozen tables vs the dequantized oracle "
-                         "(bit-equality, bytes, compile budget)")
+                         "(bit-equality, bytes, compile budget); "
+                         "families: the same traffic through decoder vs "
+                         "rwkv vs moe runners (tokens/sec per family, "
+                         "compile-budget + recurrent pad-invariance "
+                         "asserts)")
     ap.add_argument("--n-requests", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)

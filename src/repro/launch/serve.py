@@ -1,9 +1,16 @@
 """Serving launcher: loads (or inits) params and serves batched requests
 through the continuous-batching engine (or the wave baseline).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+    PYTHONPATH=src python -m repro.launch.serve --model qwen3-0.6b --smoke \
         --batch 4 --cache-len 64 --prompt-buckets 8,16,32 \
         --decode-buckets 1,2,4 --policy sjf
+
+``--model`` (alias ``--arch``) picks any registry entry — attention
+decoders, rwkv6/mamba/jamba hybrids, MoE, and enc-dec configs all serve
+through the continuous engine's ModelRunner protocol (underscores in the
+name normalize to hyphens, so ``--model rwkv6_7b`` works). Enc-dec
+configs synthesize random encoder frames per request (the frontend is a
+stub; see ``repro.models.encdec``).
 
 The engine rounds prefill launches to (batch-bucket, prompt-bucket) shapes,
 compacts decode launches to the smallest decode bucket holding the active
@@ -20,13 +27,14 @@ import time
 
 import numpy as np
 
-from repro.configs.registry import get_config, get_smoke
+from repro.configs.registry import ARCHS, get_config, get_smoke
 from repro.ft.checkpoint import latest_step, restore_checkpoint
 from repro.launch.specs import build_model
 from repro.nn.module import init_params
 from repro.serve.engine import (Request, SamplingParams, Scheduler,
                                 ServeEngine, WaveEngine)
 from repro.serve.guard import QueueFullError
+from repro.serve.runner import recurrent_mixer_names
 
 
 def _parse_buckets(ap: argparse.ArgumentParser, text: str, flag: str):
@@ -70,9 +78,23 @@ def _parse_pos_float(ap: argparse.ArgumentParser, text: str, flag: str):
     return v
 
 
+def _resolve_arch(ap: argparse.ArgumentParser, name: str) -> str:
+    """Registry lookup with underscore->hyphen normalization; unknown
+    names route through ap.error listing the valid choices instead of a
+    raw KeyError traceback."""
+    normalized = name.strip().lower().replace("_", "-")
+    if normalized not in ARCHS:
+        ap.error(f"unknown model {name!r}; choices: {sorted(ARCHS)}")
+    return normalized
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--model", default="",
+                    help="registry model name (repro.configs.registry), "
+                         "e.g. rwkv6-7b / rwkv6_7b — every family serves "
+                         "through the continuous engine")
+    ap.add_argument("--arch", default="", help="alias for --model")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4,
                     help="cache slots (continuous) / wave size (wave)")
@@ -142,7 +164,10 @@ def main():
                          "identical launch counts")
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if bool(args.model) == bool(args.arch):
+        ap.error("pass exactly one of --model / --arch (they are aliases)")
+    arch = _resolve_arch(ap, args.model or args.arch)
+    cfg = get_smoke(arch) if args.smoke else get_config(arch)
     model = build_model(cfg)
     # one directory scan per load (latest_step used to run twice)
     step = latest_step(args.ckpt_dir) if args.ckpt_dir else None
@@ -191,6 +216,17 @@ def main():
                      "--snapshot-dir/--snapshot-every only apply to the "
                      "continuous engine (WaveEngine has no request "
                      "lifecycle)")
+        # the wave baseline is decoder-LM only; the continuous engine's
+        # runners cover the other families
+        if cfg.family == "encdec":
+            ap.error(f"--engine wave cannot serve enc-dec config {arch!r}: "
+                     f"use the continuous engine (EncDecRunner)")
+        mix = recurrent_mixer_names(cfg)
+        if args.batch > 1 and mix:
+            ap.error(f"--engine wave pads batched prompts and gives "
+                     f"{'/'.join(mix)} layers no pad-validity guarantee: "
+                     f"use the continuous engine (pad-aware "
+                     f"RecurrentRunner) or --batch 1")
         engine = WaveEngine(model, cfg, params, batch=args.batch,
                             cache_len=args.cache_len,
                             quantize=args.quantize)
@@ -210,7 +246,9 @@ def main():
                                                  if snapshot_dir else 0),
                                  quantize=args.quantize)
         except ValueError as e:
-            if "_buckets" in str(e):
+            # misconfiguration (bad bucket lists, prefix cache against a
+            # runner that cannot donate rows) is a usage error, not a crash
+            if "_buckets" in str(e) or "prefix_cache" in str(e):
                 ap.error(str(e))
             raise
         print(f"buckets: batch={engine.batch_buckets} "
@@ -244,6 +282,14 @@ def main():
             return np.concatenate([heads[i % len(heads)], tail])
         return tail
 
+    def _extra():
+        # enc-dec requests carry per-request encoder frames (the speech
+        # frontend is a stub, so random embeddings stand in)
+        if cfg.family != "encdec":
+            return None
+        enc_len = cfg.enc_seq or args.cache_len
+        return rng.standard_normal((enc_len, cfg.d_model)).astype(np.float32)
+
     reqs = [
         Request(
             _prompt(i),
@@ -251,6 +297,7 @@ def main():
             stop_tokens=tuple(args.stop_token),
             sampling=sampling,
             deadline_ms=deadline_ms,
+            extra=_extra(),
         )
         for i in range(args.n_requests)
     ]

@@ -164,7 +164,8 @@ class HybridDecoderLM:
     # ------------------------------------------------------------------
     # one layer
     # ------------------------------------------------------------------
-    def _apply_layer(self, lspec: LayerSpec, stack, p, x, positions, cache):
+    def _apply_layer(self, lspec: LayerSpec, stack, p, x, positions, cache,
+                     mask=None, moe_no_drop=False):
         cfg = self.cfg
         ln1 = RMSNorm(cfg.d_model, stack=stack)
         ln2 = RMSNorm(cfg.d_model, stack=stack)
@@ -173,7 +174,12 @@ class HybridDecoderLM:
         h = ln1(p["ln1"], x)
         mixer = self._mixer(lspec, stack)
         if lspec.mixer in ("attn", "attn_local"):
+            # attention masks pads through negative positions already; the
+            # validity mask is only threaded to the recurrent mixers so
+            # attention-family jaxprs are unchanged
             mo, new_cache = mixer(p["mixer"], h, positions, cache=cache)
+        elif mask is not None:
+            mo, new_cache = mixer(p["mixer"], h, cache=cache, mask=mask)
         else:
             mo, new_cache = mixer(p["mixer"], h, cache=cache)
         x = x + mo
@@ -184,12 +190,17 @@ class HybridDecoderLM:
         ffn_cache = None
         if "dense" in ffns:
             if lspec.mixer == "rwkv":
-                fo, ffn_cache = ffns["dense"](p["ffn_dense"], h, cache=cache)
+                if mask is not None:
+                    fo, ffn_cache = ffns["dense"](p["ffn_dense"], h,
+                                                  cache=cache, mask=mask)
+                else:
+                    fo, ffn_cache = ffns["dense"](p["ffn_dense"], h,
+                                                  cache=cache)
             else:
                 fo = ffns["dense"](p["ffn_dense"], h)
             out = out + fo
         if "moe" in ffns:
-            fo, a = ffns["moe"](p["ffn_moe"], h)
+            fo, a = ffns["moe"](p["ffn_moe"], h, no_drop=moe_no_drop)
             out = out + fo
             aux = aux + a
         x = x + out
@@ -201,7 +212,7 @@ class HybridDecoderLM:
     # group execution (scan over repeats)
     # ------------------------------------------------------------------
     def _apply_group(self, gi, group: LayerGroup, params_g, x, positions,
-                     cache_g):
+                     cache_g, mask=None, moe_no_drop=False):
         cfg = self.cfg
         stack = (group.repeat,) if group.repeat > 1 else ()
         use_cache = cache_g is not None
@@ -210,8 +221,11 @@ class HybridDecoderLM:
         # 6-layer 5:1 pattern, jamba's 8-layer period) must not require all
         # of its layers' intermediates live at once in the backward pass —
         # measured 310 GB/dev on gemma3 train_4k with body-level remat only.
-        def one_layer(lspec, p_li, x, positions, c):
-            return self._apply_layer(lspec, (), p_li, x, positions, c)
+        # ``mask`` rides as a traced arg (None is an empty pytree);
+        # ``moe_no_drop`` is a static Python bool closed over, never traced.
+        def one_layer(lspec, p_li, x, positions, mask, c):
+            return self._apply_layer(lspec, (), p_li, x, positions, c,
+                                     mask=mask, moe_no_drop=moe_no_drop)
 
         layer_fn = (jax.checkpoint(one_layer, static_argnums=(0,))
                     if cfg.remat != "none" else one_layer)
@@ -223,7 +237,7 @@ class HybridDecoderLM:
             for li, lspec in enumerate(group.layers):
                 c = c_slice[f"l{li}"] if use_cache else None
                 x, nc, a = layer_fn(
-                    lspec, p_slice[f"l{li}"], x, positions, c
+                    lspec, p_slice[f"l{li}"], x, positions, mask, c
                 )
                 if use_cache:
                     new_c[f"l{li}"] = nc
@@ -258,6 +272,7 @@ class HybridDecoderLM:
         img_embeds: Optional[jax.Array] = None,   # VLM prefix (B, P, D)
         cache: Optional[List[dict]] = None,
         logits_mode: str = "all",                 # all | last | none
+        moe_no_drop: bool = False,
     ):
         """Training / prefill forward. Returns (logits, new_cache, aux).
 
@@ -265,6 +280,14 @@ class HybridDecoderLM:
         logits (training computes the loss chunked over the vocab);
         ``'last'`` projects only the final position (prefill) — the full
         (B, S, V) tensor is never materialized for large-vocab configs.
+
+        When ``positions`` is given and the config has recurrent mixers
+        (mamba/rwkv), a validity mask ``positions >= 0`` is threaded to
+        them: the serve engine's left-pad lanes carry negative positions,
+        and the mask makes them contribute exactly nothing to recurrent
+        state (attention already masks pads via negative positions, so
+        attention-family traces are unchanged). ``moe_no_drop=True`` is the
+        serving MoE dispatch (see :class:`repro.nn.moe.MoE`).
         """
         cfg = self.cfg
         emb = Embedding(cfg.vocab, cfg.d_model, dtype=cfg.param_dtype)
@@ -274,6 +297,9 @@ class HybridDecoderLM:
         from repro.dist.sharding import constrain_batch_leading
         x = constrain_batch_leading(x)
         B, S, _ = x.shape
+        mask = None
+        if positions is not None and self._has_recurrent():
+            mask = positions >= 0
         if positions is None:
             positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
 
@@ -282,7 +308,8 @@ class HybridDecoderLM:
         for gi, group in enumerate(cfg.layer_groups()):
             cg = cache[gi] if cache is not None else None
             x, nc, a = self._apply_group(
-                gi, group, params[f"group{gi}"], x, positions, cg
+                gi, group, params[f"group{gi}"], x, positions, cg,
+                mask=mask, moe_no_drop=moe_no_drop,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -319,17 +346,24 @@ class HybridDecoderLM:
             params["lm_head"]["w"].astype(jnp.float32),
         )
 
+    def _has_recurrent(self) -> bool:
+        """True when any layer carries recurrent (mamba/rwkv) state."""
+        return any(l.mixer in ("mamba", "rwkv")
+                   for g in self.cfg.layer_groups() for l in g.layers)
+
     def decode_step(
         self,
         params,
         tokens: jax.Array,       # (B, 1)
         cache: List[dict],
         pos: jax.Array,          # (B,) current absolute position
+        moe_no_drop: bool = False,
     ):
         """One-token decode against the cache. Returns (logits, cache)."""
         positions = pos[:, None].astype(jnp.int32)
         logits, new_cache, _ = self.forward(
-            params, tokens, positions=positions, cache=cache
+            params, tokens, positions=positions, cache=cache,
+            moe_no_drop=moe_no_drop,
         )
         return logits[:, -1], new_cache
 

@@ -130,14 +130,22 @@ class EncDecLM:
 
     # ------------------------------------------------------------------
     def forward(self, params, frames: jax.Array, tokens: jax.Array,
-                cache=None, logits_mode: str = "all"):
-        """Teacher-forced training / prefill: returns (logits, cache, aux)."""
+                cache=None, logits_mode: str = "all",
+                positions: Optional[jax.Array] = None):
+        """Teacher-forced training / prefill: returns (logits, cache, aux).
+
+        ``positions`` overrides the default ``arange`` decoder positions —
+        the serve engine passes left-padded buckets with negative pad
+        positions, which the causal self-attention masks out (encoder
+        positions are all >= 0, so cross-attention sees the full encoder
+        output from every real decoder position)."""
         cfg = self.cfg
         enc_out, enc_pos = self.encode(params, frames)
         emb = Embedding(cfg.vocab, cfg.d_model, dtype=cfg.param_dtype)
         x = emb.encode(params["embed"], tokens)
         B, S, _ = x.shape
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        pos = (positions if positions is not None else
+               jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)))
         x, new_cache = self._decode_stack(
             params, x, pos, enc_out, enc_pos, cache
         )

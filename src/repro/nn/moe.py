@@ -58,8 +58,18 @@ class MoE:
         return {"router": self.router.specs(), "experts": self.experts.specs()}
 
     # ------------------------------------------------------------------
-    def __call__(self, params, x: jax.Array):
-        """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    def __call__(self, params, x: jax.Array, no_drop: bool = False):
+        """x (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+        ``no_drop=True`` is the serving dispatch: capacity is set to N (a
+        token's T expert slots are distinct, so per-expert load never
+        exceeds N) and nothing is ever dropped. Each token's output then
+        depends only on its own row — independent of batch composition and
+        bucket padding — which is what lets the serve engine run MoE
+        configs bit-identically across bucket shapes. Capacity stays a
+        static function of the launch shape, so the compile budget is
+        unchanged. Training keeps the capacity-factor drop path (the
+        load-balance pressure the aux loss is tuned against)."""
         B, S, d = x.shape
         E, T = self.n_experts, self.top_k
         N = B * S
@@ -71,8 +81,11 @@ class MoE:
         gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
 
         # capacity per expert (static)
-        C = max(1, int(N * T / E * self.capacity_factor))
-        C = min(C, N)
+        if no_drop:
+            C = N
+        else:
+            C = max(1, int(N * T / E * self.capacity_factor))
+            C = min(C, N)
 
         # position of each (token, slot) within its expert's capacity —
         # sort-based, O(N·T) memory. (A cumsum over a one-hot (N·T, E)

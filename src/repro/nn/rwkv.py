@@ -44,6 +44,15 @@ def _token_shift(x: jax.Array, last: Optional[jax.Array]):
     return prev
 
 
+def _prev_valid(mask: jax.Array) -> jax.Array:
+    """Validity of each position's *previous* token under a (B, S) validity
+    mask: ``True`` at t=0 (the carried ``last`` IS the legitimate previous
+    token — for a fresh cache it is zeros, matching an unpadded run
+    bit-exactly), ``mask[:, t-1]`` after. A left-pad lane's embedding thus
+    never enters a real token's shift mix."""
+    return jnp.pad(mask[:, :-1], ((0, 0), (1, 0)), constant_values=True)
+
+
 @dataclasses.dataclass(frozen=True)
 class RWKV6TimeMix:
     cfg: ModelConfig
@@ -90,13 +99,23 @@ class RWKV6TimeMix:
         }
 
     # ------------------------------------------------------------------
-    def __call__(self, params, x, cache: Optional[dict] = None):
+    def __call__(self, params, x, cache: Optional[dict] = None,
+                 mask: Optional[jax.Array] = None):
+        """``mask`` (B, S) bool marks valid (non-pad) positions. Pad lanes
+        contribute exactly nothing: their x never enters a token shift
+        (``_prev_valid``) and the WKV state skips their scan steps, so a
+        left-padded bucketed prefill is bit-identical to the unpadded B=1
+        run. ``mask=None`` (training / unpadded callers) is the original
+        unmasked path, op for op."""
         cfg = self.cfg
         B, S, d = x.shape
         H, hd = self.n_heads, cfg.rwkv_head_dim
 
         last = cache["shift_att"] if cache is not None else None
         prev = _token_shift(x, last)
+        if mask is not None:
+            prev = jnp.where(_prev_valid(mask)[..., None], prev,
+                             jnp.zeros_like(prev))
         dx = (prev - x).astype(jnp.float32)
         xf = x.astype(jnp.float32)
 
@@ -127,17 +146,22 @@ class RWKV6TimeMix:
         )
 
         def step(s, t):
-            r_t, k_t, v_t, w_t = t                            # (B,H,hd) each
+            r_t, k_t, v_t, w_t = t[:4]                        # (B,H,hd) each
             kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,hd,hd)
             y = jnp.einsum(
                 "bhk,bhkv->bhv", r_t * u[None], kv
             ) + jnp.einsum("bhk,bhkv->bhv", r_t, s)
-            s = w_t[..., :, None] * s + kv
-            return s, y
+            s_new = w_t[..., :, None] * s + kv
+            if mask is not None:
+                # pad steps leave the state untouched (decay included)
+                s_new = jnp.where(t[4][:, None, None, None], s_new, s)
+            return s_new, y
 
         ts = tuple(
             jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, wh)
         )
+        if mask is not None:
+            ts = ts + (jnp.moveaxis(mask, 1, 0),)
         from repro.nn.scan import chunked_time_scan
         sT, ys = chunked_time_scan(step, s0, ts, chunk=256, remat=S > 256)
         y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)           # (B,S,d) f32
@@ -183,11 +207,17 @@ class RWKV6ChannelMix:
             "wv": lin(dff, d, "mlp", "embed").specs(),
         }
 
-    def __call__(self, params, x, cache: Optional[dict] = None):
+    def __call__(self, params, x, cache: Optional[dict] = None,
+                 mask: Optional[jax.Array] = None):
+        """``mask`` as in :class:`RWKV6TimeMix`: pad positions never enter
+        the channel-mix token shift."""
         cfg = self.cfg
         d, dff = cfg.d_model, cfg.d_ff
         last = cache["shift_ffn"] if cache is not None else None
         prev = _token_shift(x, last)
+        if mask is not None:
+            prev = jnp.where(_prev_valid(mask)[..., None], prev,
+                             jnp.zeros_like(prev))
         dx = (prev - x).astype(jnp.float32)
         xf = x.astype(jnp.float32)
         xk = (xf + dx * params["mu_k"]).astype(x.dtype)

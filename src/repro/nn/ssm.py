@@ -109,15 +109,24 @@ class Mamba:
         return out, new_state
 
     def __call__(
-        self, params, x: jax.Array, cache: Optional[dict] = None
+        self, params, x: jax.Array, cache: Optional[dict] = None,
+        mask: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, Optional[dict]]:
-        """x (B, S, d) -> (y (B, S, d), new cache)."""
+        """x (B, S, d) -> (y (B, S, d), new cache).
+
+        ``mask`` (B, S) bool marks valid (non-pad) positions. Pad lanes
+        contribute exactly nothing: their conv input is zeroed *before* the
+        causal window (so a left-padded window bit-matches the zero-padding
+        of a fresh unpadded run) and the SSM state skips their scan steps.
+        ``mask=None`` is the original unmasked path, op for op."""
         cfg = self.cfg
         B, S, _ = x.shape
         di, ds = self.d_inner, cfg.mamba_d_state
 
         xz = self.in_proj(params["in_proj"], x)
         xi, z = jnp.split(xz, 2, axis=-1)                     # (B,S,di) each
+        if mask is not None:
+            xi = jnp.where(mask[..., None], xi, jnp.zeros_like(xi))
 
         conv_state = cache["conv"] if cache is not None else None
         xi, new_conv = self._conv(params, xi, conv_state)
@@ -141,12 +150,15 @@ class Mamba:
         )
 
         def step(h, t):
-            dt_t, B_t, C_t, x_t = t                           # (B,di),(B,ds),(B,ds),(B,di)
+            dt_t, B_t, C_t, x_t = t[:4]                       # (B,di),(B,ds),(B,ds),(B,di)
             dA = jnp.exp(dt_t[..., None] * A)                 # (B,di,ds)
             dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]   # (B,di,ds)
-            h = dA * h + dBx
-            y = jnp.einsum("bds,bs->bd", h, C_t)
-            return h, y
+            h_new = dA * h + dBx
+            if mask is not None:
+                # pad steps leave the state untouched (decay included)
+                h_new = jnp.where(t[4][:, None, None], h_new, h)
+            y = jnp.einsum("bds,bs->bd", h_new, C_t)
+            return h_new, y
 
         ts = (
             jnp.moveaxis(dt, 1, 0),
@@ -154,6 +166,8 @@ class Mamba:
             jnp.moveaxis(Cc, 1, 0),
             jnp.moveaxis(xf, 1, 0),
         )
+        if mask is not None:
+            ts = ts + (jnp.moveaxis(mask, 1, 0),)
         from repro.nn.scan import chunked_time_scan
         hT, ys = chunked_time_scan(step, h0, ts, chunk=256,
                                    remat=S > 256)

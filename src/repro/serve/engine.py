@@ -114,8 +114,16 @@ attention mask drops every key with ``kv_pos < 0``, and pad cache writes
 land on ring slots with negative ``pos`` (masked until real tokens overwrite
 them), so bucket padding is invisible to the math: greedy outputs are
 bit-identical across bucket choices, wave sizes, and the B=1 reference loop.
-(Recurrent mixers — mamba/rwkv — carry pad tokens through their state and
-are not pad-invariant; the engine targets attention-family decoders.)
+Recurrent mixers — mamba/rwkv — get a validity mask derived from the same
+negative pad positions (``positions >= 0``), so token shifts, conv windows,
+and state updates skip pad lanes and bucketed prefill stays bit-identical
+to the unbucketed B=1 loop (see ``repro.serve.runner``).
+
+Everything model-shaped sits behind a :class:`~repro.serve.runner.
+ModelRunner`: the engine schedules, buckets, indexes prefixes, and
+snapshots host state, while the runner owns the per-slot device state tree
+and the prefill/decode executables — one engine serves every family in
+``configs/`` (attention decoders, rwkv/mamba/jamba hybrids, MoE, enc-dec).
 
 Failure semantics (the robustness layer; see ``repro.serve.guard``)
 -------------------------------------------------------------------
@@ -190,7 +198,9 @@ from repro.ft.checkpoint import (latest_step as ckpt_latest_step,
 from repro.ft.driver import StragglerWatchdog
 from repro.serve.guard import (CANCELLED, EXPIRED, FAILED, FINISHED, QUEUED,
                                RUNNING, TERMINAL_STATES, EngineFatalError,
-                               QueueFullError, classify_error)
+                               QueueFullError, classify_error,
+                               flatten_state_tree, unflatten_state_tree)
+from repro.serve.runner import make_runner, recurrent_mixer_names
 
 __all__ = [
     "make_prefill_step",
@@ -361,7 +371,12 @@ def _sample_token(logits: np.ndarray, sp: SamplingParams,
 class Request:
     """``deadline_ms``: wall-clock TTL measured from ``submit`` — the
     step-boundary watchdog EXPIREs the request (queued or running) once it
-    elapses. ``None`` means no deadline."""
+    elapses. ``None`` means no deadline.
+
+    ``extra``: per-request conditioning for families whose runner declares
+    ``requires_extra`` — for enc-dec configs, the encoder frame embeddings
+    with shape ``(enc_seq, d_model)``. Decoder-only families must leave it
+    ``None`` (the runner's ``validate_request`` enforces both ways)."""
 
     prompt: np.ndarray
     max_new: int = 16
@@ -369,6 +384,7 @@ class Request:
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
     deadline_ms: Optional[float] = None
+    extra: Optional[np.ndarray] = None
 
     def __post_init__(self):
         # accept any iterable of token ids but store a tuple, so equality,
@@ -420,45 +436,6 @@ def _validate_request(r: Request, cache_len: int) -> None:
             f"the ring cache would silently overwrite live context "
             f"(raise cache_len or lower max_new)"
         )
-
-
-def _reject_recurrent_mixers(cfg: ModelConfig, what: str) -> None:
-    """Bucketed/wave prefill left-pads prompts; attention masks the pads via
-    negative positions, but recurrent mixers (mamba/rwkv) fold pad tokens
-    into their state — outputs would silently depend on padding. Refuse
-    rather than serve wrong tokens (pad-aware state resets are roadmapped).
-    """
-    for group in cfg.layer_groups():
-        for lspec in group.layers:
-            if lspec.mixer in ("mamba", "rwkv"):
-                raise ValueError(
-                    f"{what} left-pads prompts, and {lspec.mixer!r} layers "
-                    f"carry pad tokens through their recurrent state "
-                    f"(not pad-invariant); serving this family needs "
-                    f"pad-aware state resets"
-                )
-
-
-def _reject_short_ring_caches(cfg: ModelConfig, cache_len: int) -> None:
-    """Prefix reuse copies a donor's rows for positions ``[0, m)``; a local
-    attention layer with a ring cache shorter than ``cache_len`` overwrites
-    those rows as soon as the donor decodes past the window, so a resident
-    donor cannot guarantee the shared head is still intact. Refuse rather
-    than serve wrong tokens."""
-    from repro.models.decoder import local_attn_cache_len
-
-    for group in cfg.layer_groups():
-        for lspec in group.layers:
-            if lspec.mixer == "attn_local":
-                ring = local_attn_cache_len(cfg, cache_len)
-                if ring < cache_len:
-                    raise ValueError(
-                        f"prefix_cache needs full-length KV caches, but "
-                        f"'attn_local' layers keep a ring of {ring} < "
-                        f"cache_len={cache_len} entries: donor rows past "
-                        f"the window are overwritten and the shared head "
-                        f"cannot be copied"
-                    )
 
 
 class Scheduler:
@@ -665,6 +642,35 @@ class ServeEngine:
     to :class:`WaveEngine`, and across ``decode_buckets`` choices — bucket
     padding is attention-masked and slot compaction is a pure permutation,
     never part of the math.
+
+    **ModelRunner contract.** Everything model-shaped sits behind
+    ``self.runner`` (:mod:`repro.serve.runner`); the engine holds no model
+    reference and composes exactly six runner operations: ``init_state`` /
+    ``prefill`` / ``decode`` / ``gather_state`` / ``place_state`` /
+    ``reset_rows``.
+
+    * *Pad semantics* — prefill buckets are LEFT-padded with negative pad
+      positions; the runner must make pad lanes contribute exactly nothing
+      (attention masks ``kv_pos < 0``; recurrent mixers consume a
+      ``positions >= 0`` validity mask), so the same request produces
+      bit-identical tokens at every bucket shape, including the
+      unbucketed B=1 loop.
+    * *State-tree shape rules* — the slot state is an arbitrary pytree of
+      arrays with one row per slot per leaf; only the runner knows which
+      axis is the slot axis (axis 0 for plain decoder groups, axis 1 for
+      repeat-stacked groups and enc-dec layer stacks). The engine treats
+      the tree as opaque: snapshot/restore flattens leaves generically
+      (``guard.flatten_state_tree``) and rebuilds against
+      ``init_state``'s structure and dtypes.
+    * *Capability flags* — ``supports_prefix_cache`` declares whether
+      state rows are position-sliceable; requesting ``prefix_cache=True``
+      against a runner without it raises the runner's actionable
+      ``prefix_cache_unsupported_reason`` at construction, and the
+      prefix index/matcher stay inert regardless. ``min_cache_len``
+      bounds ``cache_len`` from below. ``requires_extra`` marks families
+      whose requests carry per-request conditioning (``Request.extra`` —
+      enc-dec encoder frames), batched into every prefill launch and
+      synthesized by ``runner.prewarm_extra`` for warm-up.
     """
 
     def __init__(self, model, cfg: ModelConfig, params, batch: int,
@@ -683,12 +689,6 @@ class ServeEngine:
                  fault_injector=None,
                  clock=time.monotonic,
                  quantize: str = "off"):
-        if cfg.family == "encdec":
-            raise ValueError(
-                "ServeEngine supports decoder-LM families; enc-dec serving "
-                "needs an encoder pass per request (use the dryrun cells)"
-            )
-        _reject_recurrent_mixers(cfg, "bucketed prefill")
         # fail fast on unknown policies / bad bounds (before param freeze)
         Scheduler(policy, max_queue=max_queue, shed_policy=shed_policy)
         if int(snapshot_every) < 0:
@@ -703,11 +703,19 @@ class ServeEngine:
             raise ValueError(
                 "quantize applies to frozen circulant tables; this config "
                 "has swm disabled")
-        if cfg.swm.enabled:
-            params = freeze_params(model.specs(), params, quantize=quantize)
-        self.quantize = quantize
-        self.model, self.cfg, self.params = model, cfg, params
         self.batch, self.cache_len = int(batch), int(cache_len)
+        # the runner is the ONLY model surface the engine touches from here
+        self.runner = make_runner(model, cfg, self.cache_len)
+        if self.cache_len < self.runner.min_cache_len:
+            raise ValueError(
+                f"cache_len={self.cache_len} is below "
+                f"{type(self.runner).__name__}'s minimum of "
+                f"{self.runner.min_cache_len}")
+        if cfg.swm.enabled:
+            params = freeze_params(self.runner.specs(), params,
+                                   quantize=quantize)
+        self.quantize = quantize
+        self.cfg, self.params = cfg, params
         self.policy = policy
         self.prefix_cache = bool(prefix_cache)
         self.prefix_block = int(prefix_block)
@@ -719,7 +727,11 @@ class ServeEngine:
             if self.prefix_capacity < 1:
                 raise ValueError(
                     f"prefix_capacity must be >= 1, got {prefix_capacity}")
-            _reject_short_ring_caches(cfg, self.cache_len)
+            if not self.runner.supports_prefix_cache:
+                raise ValueError(
+                    f"prefix_cache=True is unsupported for "
+                    f"{type(self.runner).__name__}: "
+                    f"{self.runner.prefix_cache_unsupported_reason}")
         self.donate = bool(donate)
         if prompt_buckets is None:
             prompt_buckets = pow2_buckets(min(8, self.cache_len),
@@ -734,12 +746,9 @@ class ServeEngine:
         self.decode_buckets = validate_buckets(
             "decode_buckets", decode_buckets, self.batch)
         self.stats = EngineStats()
-        self._repeat_axes = tuple(
-            1 if g.repeat > 1 else 0 for g in cfg.layer_groups()
-        )
         # raw (unjitted) fns kept for jaxpr introspection in tests
-        self._prefill_fn = self._prefill_and_place
-        self._decode_fn = self._decode_and_place
+        self._prefill_fn = self.runner.prefill
+        self._decode_fn = self.runner.decode
         # donating the cache argument lets XLA alias input and output slot
         # caches: the place-back scatter updates HBM in place instead of
         # writing a second full cache per launch. Every caller threads the
@@ -794,101 +803,10 @@ class ServeEngine:
     def decode_compiles(self) -> int:
         return int(self._decode._cache_size())
 
-    # -- device-side steps --------------------------------------------------
-    def _prefill_and_place(self, params, tokens, positions, cache, slot_idx,
-                           donor_idx=None, match_len=None):
-        """Prefill a bucket-shaped group, then scatter its rows into the
-        persistent slot cache at ``slot_idx``.
-
-        Without ``donor_idx`` the group starts from fresh (empty) rows.
-        With it (the prefix-cache path), row ``j`` starts from a copy of
-        slot ``donor_idx[j]``'s cache rows with every entry at position
-        ``>= match_len[j]`` masked out — the shared prompt head is copied,
-        not recomputed, and ``tokens``/``positions`` carry only the
-        unmatched tail. A missing match passes the row's own slot with
-        ``match_len 0`` (fully-masked seed == fresh rows, bit-identical:
-        masked entries contribute exactly zero to attention).
-
-        Returns ``(last_logits, ok, placed_cache)``: ``ok[j]`` is a
-        device-side per-row finiteness flag (all logits finite) — the
-        error-isolation guard rides in this executable's epilogue instead
-        of costing a separate compile."""
-        B = tokens.shape[0]
-        if donor_idx is None:
-            fresh = self.model.init_cache(B, self.cache_len)
-        else:
-            fresh = self._seed_cache(cache, donor_idx, match_len)
-        logits, filled, _ = self.model.forward(
-            params, tokens, positions=positions, cache=fresh,
-            logits_mode="last",
-        )
-        last = logits[:, -1]
-        ok = jnp.isfinite(last).all(axis=-1)
-        return last, ok, self._place_cache(cache, filled, slot_idx)
-
-    def _seed_cache(self, cache, donor_idx, match_len):
-        """Bucket-shaped cache seeded from donor slot rows: entries at
-        positions ``>= match_len`` (donor tail/decode rows and donor pads)
-        get ``pos -> -1`` so only the matched head survives the attention
-        mask. k/v values past the match are left in place — masked lanes
-        contribute exactly zero, so they never reach the output."""
-        sub = self._gather_cache(cache, donor_idx)
-        out = []
-        for axis, g in zip(self._repeat_axes, sub):
-            m = match_len[:, None] if axis == 0 else match_len[None, :, None]
-
-            def seed(d, m=m):
-                return {
-                    name: (jnp.where(leaf < m, leaf, -1)
-                           if name == "pos" else leaf)
-                    for name, leaf in d.items()
-                }
-
-            out.append({name: seed(layer) for name, layer in g.items()})
-        return out
-
-    def _decode_and_place(self, params, tokens, cache, pos, slot_idx):
-        """Gather the slot rows named by ``slot_idx`` into a bucket-shaped
-        sub-batch, decode one token there, then scatter the updated rows
-        back into the persistent slot cache. ``tokens (Bb, 1)``, ``pos
-        (Bb,)``, ``slot_idx (Bb,)`` — a pure permutation of rows, so the
-        per-slot math is identical to full-slot decode.
-
-        Returns ``(logits, ok, placed_cache)`` — ``ok`` is the same
-        per-row finiteness flag as ``_prefill_and_place`` (no extra
-        executable)."""
-        sub = self._gather_cache(cache, slot_idx)
-        logits, new_sub = self.model.decode_step(params, tokens, sub, pos)
-        ok = jnp.isfinite(logits).all(axis=-1)
-        return logits, ok, self._place_cache(cache, new_sub, slot_idx)
-
-    def _gather_cache(self, src, idx):
-        """Gather slot rows into a sub-batch cache (inverse of
-        ``_place_cache``); batch axis 0 plain, 1 repeat-stacked."""
-        out = []
-        for axis, s_g in zip(self._repeat_axes, src):
-            def take(s, axis=axis):
-                return s[idx] if axis == 0 else s[:, idx]
-            out.append(jax.tree.map(take, s_g))
-        return out
-
-    def _place_cache(self, dst, src, idx):
-        """Scatter per-request cache rows into slot rows. The batch axis is
-        0 for plain groups and 1 for repeat-stacked groups (leading scan
-        axis) — mirroring ``model.init_cache``."""
-        out = []
-        for axis, d_g, s_g in zip(self._repeat_axes, dst, src):
-            def put(d, s, axis=axis):
-                s = s.astype(d.dtype)
-                return (d.at[idx].set(s) if axis == 0
-                        else d.at[:, idx].set(s))
-            out.append(jax.tree.map(put, d_g, s_g))
-        return out
-
     # -- host-side slot state ----------------------------------------------
     def _reset_slots(self):
         B = self.batch
-        self.cache = self.model.init_cache(B, self.cache_len)
+        self.cache = self.runner.init_state(B)
         self._active = np.zeros(B, bool)
         self._slot_req: List[Optional[int]] = [None] * B
         self._slot_rng: List[Optional[np.random.Generator]] = [None] * B
@@ -923,8 +841,13 @@ class ServeEngine:
     def _index_insert(self, slot: int, prompt: np.ndarray) -> None:
         """Register a freshly-prefilled slot as a donor: every block-aligned
         prefix of its prompt maps to the slot. The index is LRU-bounded by
-        ``prefix_capacity`` (forgetting an entry never frees slot rows)."""
-        if not self.prefix_cache:
+        ``prefix_capacity`` (forgetting an entry never frees slot rows).
+
+        Gated on the runner's ``supports_prefix_cache`` as well as the
+        engine flag: recurrent/enc-dec state has no per-position rows to
+        donate, so indexing those prompts would promise copies the runner
+        cannot make."""
+        if not self.prefix_cache or not self.runner.supports_prefix_cache:
             return
         self._slot_prompt[slot] = prompt
         self._clock += 1
@@ -944,7 +867,8 @@ class ServeEngine:
         produce the first-token logits) and by ``m + tail_bucket <=
         cache_len`` (the tail's pad ring slots must stay clear of the
         copied donor rows). Returns ``(donor_slot, m)`` or ``(None, 0)``."""
-        if not self.prefix_cache or not self._prefix_index:
+        if not self.prefix_cache or not self.runner.supports_prefix_cache \
+                or not self._prefix_index:
             return None, 0
         L = int(prompt.shape[0])
         raw = prompt.tobytes()                 # one serialization, sliced
@@ -964,6 +888,7 @@ class ServeEngine:
 
     def _validate(self, r: Request) -> None:
         _validate_request(r, self.cache_len)
+        self.runner.validate_request(r)
 
     # -- lifecycle ----------------------------------------------------------
     def _check_alive(self) -> None:
@@ -990,9 +915,8 @@ class ServeEngine:
         after a non-finite launch row: NaN k/v entries contaminate any
         later read through attention even when masked (``0 · NaN = NaN``),
         including the no-match self-donor seed of the next prefill."""
-        blank = self.model.init_cache(1, self.cache_len)
         idx = jnp.asarray([slot], jnp.int32)
-        self.cache = self._place_cache(self.cache, blank, idx)
+        self.cache = self.runner.reset_rows(self.cache, idx)
 
     def _finalize(self, rid: int, status: str,
                   error: Optional[str] = None, *,
@@ -1199,16 +1123,26 @@ class ServeEngine:
                     self.stats.padded_prompt_tokens += Sb - T
                 for slot in slots:
                     self._index_drop_slot(slot)   # rows being overwritten
-                args = (self.params, jnp.asarray(toks), jnp.asarray(pos),
-                        self.cache,
-                        jnp.asarray(np.asarray(slots, np.int32)))
+                # the optional parts ride as kwargs so the positional
+                # layout (donated state at 3) is constant across runners;
+                # the kwarg set is fixed per engine configuration, so the
+                # jit cache still sees one calling convention
+                kw = {}
                 if self.prefix_cache:
-                    args += (jnp.asarray(donor_idx), jnp.asarray(mlen))
+                    kw["donor_idx"] = jnp.asarray(donor_idx)
+                    kw["match_len"] = jnp.asarray(mlen)
+                if self.runner.requires_extra:
+                    kw["extra"] = jnp.asarray(np.stack([
+                        np.asarray(self._req[rid].extra, np.float32)
+                        for rid in chunk]))
                 try:
                     if self.faults is not None:
                         self.faults.on_launch("prefill",
                                               self.stats.prefill_calls)
-                    logits, ok, self.cache = self._prefill(*args)
+                    logits, ok, self.cache = self._prefill(
+                        self.params, jnp.asarray(toks), jnp.asarray(pos),
+                        self.cache,
+                        jnp.asarray(np.asarray(slots, np.int32)), **kw)
                 except BaseException as e:
                     if classify_error(e) != "request":
                         self._die(e)
@@ -1361,12 +1295,17 @@ class ServeEngine:
                 pos = (jnp.broadcast_to(jnp.arange(Sb, dtype=jnp.int32),
                                         (Bb, Sb)) - Sb)
                 slots = jnp.arange(Bb, dtype=jnp.int32)
-                args = (self.params, toks, pos, self.cache, slots)
+                kw = {}
                 if self.prefix_cache:
                     # self-donor with match 0: fully-masked seed, same
                     # calling convention (and executable) as real traffic
-                    args += (slots, jnp.zeros((Bb,), jnp.int32))
-                _, _, self.cache = self._prefill(*args)
+                    kw["donor_idx"] = slots
+                    kw["match_len"] = jnp.zeros((Bb,), jnp.int32)
+                ex = self.runner.prewarm_extra(Bb)
+                if ex is not None:
+                    kw["extra"] = ex
+                _, _, self.cache = self._prefill(
+                    self.params, toks, pos, self.cache, slots, **kw)
         for Bb in self.decode_buckets:
             # probe at position -1: the ring write lands with a negative
             # stored position (masked), so committing the returned cache
@@ -1537,6 +1476,7 @@ class ServeEngine:
         """Configuration identity a snapshot is only valid against."""
         return {
             "batch": self.batch, "cache_len": self.cache_len,
+            "runner": type(self.runner).__name__,
             "policy": self.policy,
             "prompt_buckets": list(self.prompt_buckets),
             "decode_buckets": list(self.decode_buckets),
@@ -1575,12 +1515,15 @@ class ServeEngine:
         assert (self._slot_refs == 0).all(), \
             "snapshot mid-admission: donor rows are pinned"
         now = self._clock_fn()
+        extra_rids = sorted(rid for rid, r in self._req.items()
+                            if r.extra is not None)
         meta = {
-            "version": 1,
+            "version": 2,
             "fingerprint": self._fingerprint(),
             "step_count": self._step_count,
             "next_rid": self._next_rid,
             "prefix_clock": self._clock,
+            "extra_rids": extra_rids,
             "requests": [
                 [rid, {
                     "prompt": np.asarray(r.prompt, np.int32)
@@ -1628,11 +1571,20 @@ class ServeEngine:
                 "decode": sorted(int(b)
                                  for b in self.stats.decode_shapes)},
         }
+        # the state tree is serialized OPAQUELY — flat canonical leaf
+        # order, no knowledge of the family's tree shape (KV-cache group
+        # lists, recurrent-state dicts, enc-dec layer stacks all work)
         state = {
-            "cache": {f"g{i:03d}": g for i, g in enumerate(self.cache)},
+            "cache": flatten_state_tree(self.cache),
             "meta": np.frombuffer(json.dumps(meta).encode("utf-8"),
                                   np.uint8),
         }
+        if extra_rids:
+            # per-request conditioning (enc-dec encoder frames) rides in
+            # the array section; meta["extra_rids"] names the owners
+            state["extra"] = {
+                f"r{rid:08d}": np.asarray(self._req[rid].extra, np.float32)
+                for rid in extra_rids}
         path = save_checkpoint(self.snapshot_dir, self._step_count, state)
         self.stats.snapshots += 1
         return path
@@ -1668,13 +1620,11 @@ class ServeEngine:
                 f"{meta['fingerprint']} vs this engine {fp} — restore "
                 f"needs an identically-configured engine"
             )
-        groups = state["cache"]
-        cache = [groups[f"g{i:03d}"] for i in range(len(self._repeat_axes))]
-        # cast through the template so cache dtypes match exactly (the
-        # checkpoint round-trips bf16 through f32 files)
-        tmpl = self.model.init_cache(self.batch, self.cache_len)
-        self.cache = jax.tree.map(
-            lambda t, x: jnp.asarray(x, t.dtype), tmpl, cache)
+        # rebuild the opaque state tree against the runner's template
+        # (structure + dtypes — the checkpoint round-trips bf16 through
+        # f32 files); leaf-count mismatches raise with the family named
+        self.cache = unflatten_state_tree(
+            self.runner.init_state(self.batch), state["cache"])
         self._step_count = int(meta["step_count"])
         self._next_rid = int(meta["next_rid"])
         self._clock = int(meta["prefix_clock"])
@@ -1689,6 +1639,9 @@ class ServeEngine:
                     seed=int(d["sampling"]["seed"])),
                 deadline_ms=d["deadline_ms"],
             ) for rid, d in meta["requests"]}
+        for rid in meta.get("extra_rids", []):
+            self._req[int(rid)].extra = np.asarray(
+                state["extra"][f"r{int(rid):08d}"], np.float32)
         self._out = {int(rid): [int(t) for t in toks]
                      for rid, toks in meta["out"]}
         self._finished, self._status, self._error = {}, {}, {}
@@ -1760,9 +1713,22 @@ class WaveEngine:
 
     def __init__(self, model, cfg: ModelConfig, params, batch: int,
                  cache_len: int, *, quantize: str = "off"):
-        if int(batch) > 1:
-            # a wave of one never pads; larger waves pad to the wave max
-            _reject_recurrent_mixers(cfg, "wave prefill")
+        if cfg.family == "encdec":
+            raise ValueError(
+                "WaveEngine is a decoder-LM baseline: enc-dec serving "
+                "needs a per-request encoder pass — use ServeEngine, "
+                "which serves encdec configs through EncDecRunner")
+        mix = recurrent_mixer_names(cfg)
+        if int(batch) > 1 and mix:
+            # a wave of one never pads; larger waves pad to the wave max,
+            # and the wave path ships no MoE no-drop dispatch either —
+            # batched hybrids belong on ServeEngine's RecurrentRunner
+            raise ValueError(
+                f"wave prefill left-pads prompts, and the wave baseline "
+                f"gives {'/'.join(mix)} layers no pad-validity guarantee "
+                f"for their recurrent state — serve this family with "
+                f"ServeEngine (pad-aware bucketed prefill) or batch=1 "
+                f"waves (never padded)")
         from repro.kernels.block_circulant.plan import (_check_quantize,
                                                         freeze_params)
         _check_quantize(quantize)

@@ -25,6 +25,11 @@ pieces of the robustness layer that are independent of the engine itself:
   seeded random faults) so the chaos suite can drive every failure path
   deterministically. :class:`ManualClock` makes deadline expiry testable
   without wall-clock sleeps.
+* **Generic state-tree serialization** — :func:`flatten_state_tree` /
+  :func:`unflatten_state_tree` turn any runner state tree (KV-cache
+  lists, recurrent-state dicts, enc-dec layer stacks) into the flat
+  string-keyed dict ``ft.checkpoint`` persists, and back — snapshot/
+  restore never needs to know a family's tree shape.
 """
 
 from __future__ import annotations
@@ -42,7 +47,42 @@ __all__ = [
     "classify_error",
     "ManualClock",
     "ServeFaultInjector",
+    "flatten_state_tree", "unflatten_state_tree",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Generic runner-state serialization (snapshot/restore)
+# ---------------------------------------------------------------------------
+
+
+def flatten_state_tree(tree) -> dict:
+    """Any pytree of arrays -> a flat ``{"s00000": leaf, ...}`` dict in
+    canonical (``jax.tree_util``) leaf order — deterministic across runs,
+    so a snapshot taken by one engine restores into a fresh engine built
+    from the same config."""
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    return {f"s{i:05d}": leaf for i, leaf in enumerate(leaves)}
+
+
+def unflatten_state_tree(template, flat: dict):
+    """Inverse of :func:`flatten_state_tree`: rebuild ``template``'s
+    structure from the flat dict, casting each leaf to the template
+    leaf's dtype (checkpoints round-trip bf16 through f32)."""
+    import jax
+    import jax.numpy as jnp
+
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = [f"s{i:05d}" for i in range(len(t_leaves))]
+    if sorted(flat) != keys:
+        raise ValueError(
+            f"snapshot state has {len(flat)} leaves, the runner's state "
+            f"tree has {len(t_leaves)} — the snapshot was taken by a "
+            f"different model family or config")
+    leaves = [jnp.asarray(flat[k], t.dtype) for k, t in zip(keys, t_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 # ---------------------------------------------------------------------------

@@ -576,10 +576,13 @@ def test_wave_engine_is_greedy_only(lm):
                                stop_tokens=(1,))])
 
 
-def test_recurrent_mixers_rejected():
-    """Pad tokens pollute recurrent state — serving must refuse, not emit
-    silently padding-dependent tokens."""
+def test_recurrent_mixer_capabilities():
+    """Recurrent families serve through ServeEngine's RecurrentRunner
+    (pad-aware masking makes bucketed prefill safe), but their state has
+    no per-position rows: the prefix cache must refuse with an actionable
+    message, and the padding wave baseline still rejects batched waves."""
     from repro.configs.base import LayerGroup, LayerSpec
+    from repro.serve.runner import RecurrentRunner
 
     cfg = _cfg(n_layers=1, rwkv_head_dim=16, rwkv_decay_lora=8,
                rwkv_mix_lora=8,
@@ -588,8 +591,17 @@ def test_recurrent_mixers_rejected():
                    repeat=1),))
     model = HybridDecoderLM(cfg)
     params = init_params(model.specs(), 0)
+    eng = ServeEngine(model, cfg, params, batch=2, cache_len=32)
+    assert isinstance(eng.runner, RecurrentRunner)
+    assert not eng.runner.supports_prefix_cache
+    outs = eng.generate([Request(np.arange(1, 5, dtype=np.int32), max_new=3),
+                         Request(np.arange(2, 9, dtype=np.int32), max_new=3)])
+    assert all(len(o) == 3 for o in outs)
+    # recurrent state has no per-position rows -> prefix reuse impossible
     with pytest.raises(ValueError, match="recurrent state"):
-        ServeEngine(model, cfg, params, batch=2, cache_len=32)
+        ServeEngine(model, cfg, params, batch=2, cache_len=32,
+                    prefix_cache=True)
+    # the wave baseline has no validity masking: batched waves still refuse
     with pytest.raises(ValueError, match="recurrent state"):
         WaveEngine(model, cfg, params, batch=2, cache_len=32)
     # a wave of one never pads: still allowed
