@@ -32,7 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+           "available_steps", "AsyncCheckpointer"]
 
 
 def _flatten(tree, prefix=()):
@@ -144,6 +144,25 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     with open(p) as f:
         return int(f.read().strip())
+
+
+def available_steps(ckpt_dir: str) -> list:
+    """All fully-written step numbers under ``ckpt_dir``, ascending.
+
+    Only renamed (complete) step dirs count — ``.tmp`` dirs from crashed
+    writers are invisible, same as to ``restore_checkpoint``. Restore
+    policies that fall back past a bad LATEST (the serve supervisor's
+    heal path) walk this list from the end."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name[len("step_"):]))
+            except ValueError:
+                continue
+    return sorted(steps)
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, shardings=None,

@@ -33,6 +33,8 @@ from repro.launch.specs import build_model
 from repro.nn.module import init_params
 from repro.serve.engine import (Request, SamplingParams, Scheduler,
                                 ServeEngine, WaveEngine)
+from repro.serve.frontend import (SLO_CLASSES, AsyncFrontend, TenantConfig,
+                                  TenantRejectedError)
 from repro.serve.guard import QueueFullError
 from repro.serve.runner import recurrent_mixer_names
 
@@ -76,6 +78,28 @@ def _parse_pos_float(ap: argparse.ArgumentParser, text: str, flag: str):
     if v <= 0:
         ap.error(f"{flag} must be a positive number, got {text!r}")
     return v
+
+
+def _parse_tenants(ap: argparse.ArgumentParser, text: str,
+                   default_slo: str):
+    """``name[:slo],name[:slo],...`` -> {name: TenantConfig}; malformed
+    entries and unknown SLO classes route through ap.error."""
+    if not text:
+        return {}
+    out = {}
+    for tok in text.split(","):
+        tok = tok.strip()
+        if not tok:
+            ap.error(f"--tenants has an empty entry in {text!r}")
+        name, _, slo = tok.partition(":")
+        slo = slo or default_slo
+        if slo not in SLO_CLASSES:
+            ap.error(f"--tenants: unknown SLO class {slo!r} for tenant "
+                     f"{name!r}; choices: {sorted(SLO_CLASSES)}")
+        if name in out:
+            ap.error(f"--tenants lists tenant {name!r} twice")
+        out[name] = TenantConfig(name, slo=slo)
+    return out
 
 
 def _resolve_arch(ap: argparse.ArgumentParser, name: str) -> str:
@@ -157,6 +181,22 @@ def main():
     ap.add_argument("--snapshot-every", default="",
                     help="steps between automatic snapshots (default 8; "
                          "needs --snapshot-dir)")
+    ap.add_argument("--tenants", default="",
+                    help="comma-separated tenant list, each 'name' or "
+                         "'name:slo' (slo in interactive|standard|batch; "
+                         "default from --slo-class). Requests are assigned "
+                         "round-robin; with --stream the asyncio front-end "
+                         "drives per-tenant token-bucket admission "
+                         "(continuous engine only)")
+    ap.add_argument("--slo-class", choices=sorted(SLO_CLASSES),
+                    default="standard",
+                    help="default SLO class for --tenants entries without "
+                         "an explicit one: sets the deadline_ms default "
+                         "and the DRR fairness weight")
+    ap.add_argument("--fair", action="store_true",
+                    help="shortcut for --policy fair with per-tenant DRR "
+                         "weights taken from each tenant's SLO class "
+                         "(needs --tenants)")
     ap.add_argument("--quantize", choices=("off", "int8"), default="off",
                     help="int8: freeze the circulant frequency tables as "
                          "int8 with per-block scales (dequantized inside "
@@ -191,6 +231,14 @@ def main():
     deadline_ms = _parse_pos_float(ap, args.deadline_ms, "--deadline-ms")
     max_queue = (_parse_pos_int(ap, args.max_queue, "--max-queue", 0)
                  if args.max_queue else None)
+    tenants = _parse_tenants(ap, args.tenants, args.slo_class)
+    if args.fair and not tenants:
+        ap.error("--fair needs --tenants (the DRR weights come from each "
+                 "tenant's SLO class)")
+    policy = "fair" if args.fair else args.policy
+    tenant_weights = None
+    if args.fair:
+        tenant_weights = {n: c.slo_class.weight for n, c in tenants.items()}
     snapshot_dir = args.snapshot_dir or None
     snapshot_every = _parse_pos_int(ap, args.snapshot_every,
                                     "--snapshot-every", 8)
@@ -216,6 +264,9 @@ def main():
                      "--snapshot-dir/--snapshot-every only apply to the "
                      "continuous engine (WaveEngine has no request "
                      "lifecycle)")
+        if tenants or args.fair:
+            ap.error("--tenants/--fair only apply to the continuous "
+                     "engine (WaveEngine has no admission queue)")
         # the wave baseline is decoder-LM only; the continuous engine's
         # runners cover the other families
         if cfg.family == "encdec":
@@ -236,7 +287,8 @@ def main():
                                  cache_len=args.cache_len,
                                  prompt_buckets=prompt_buckets,
                                  decode_buckets=decode_buckets,
-                                 policy=args.policy,
+                                 policy=policy,
+                                 tenant_weights=tenant_weights,
                                  prefix_cache=prefix_cache,
                                  prefix_capacity=prefix_capacity,
                                  max_queue=max_queue,
@@ -290,6 +342,7 @@ def main():
         enc_len = cfg.enc_seq or args.cache_len
         return rng.standard_normal((enc_len, cfg.d_model)).astype(np.float32)
 
+    tenant_names = sorted(tenants) if tenants else []
     reqs = [
         Request(
             _prompt(i),
@@ -298,15 +351,58 @@ def main():
             sampling=sampling,
             deadline_ms=deadline_ms,
             extra=_extra(),
+            tenant=(tenant_names[i % len(tenant_names)]
+                    if tenant_names else "default"),
         )
         for i in range(args.n_requests)
     ]
     t0 = time.perf_counter()
-    if args.stream:
+    if args.stream and tenants:
+        # multi-tenant async mode: the asyncio front-end owns admission
+        # (per-tenant token buckets, SLO deadline defaults, bounded
+        # retry-with-jitter on backpressure) while run() drives the
+        # engine on the same event loop
+        import asyncio
+
+        frontend = AsyncFrontend(engine, tenants)
+
+        async def _serve():
+            rids = []
+
+            async def _feed():
+                for r in reqs:
+                    try:
+                        rid = await frontend.submit(r.tenant, r)
+                    except TenantRejectedError as e:
+                        print(f"shed: {e}")
+                        continue
+                    rids.append(rid)
+                    print(f"submitted req {rid} tenant={r.tenant} "
+                          f"(prompt_len={r.prompt_len})")
+
+            runner = asyncio.ensure_future(frontend.run(idle_rounds=2))
+            await _feed()
+            await runner
+            while engine.step():   # submits that landed after run() idled
+                pass
+            # poll before drain: drain claims (forgets) the requests, and
+            # an EXPIRED/FAILED terminal should print as such rather than
+            # masquerade as a short finish
+            for rid in rids:
+                v = engine.poll(rid)
+                if v.status != "FINISHED":
+                    print(f"req {rid}: {v.status}"
+                          + (f" ({v.error})" if v.error else ""))
+            done = engine.drain(rids)
+            return [done[rid] for rid in rids]
+
+        outs = asyncio.run(_serve())
+    elif args.stream:
         # open-ended serving: trickle submissions in while the engine steps,
         # poll for incremental tokens, then drain the stragglers. A submit
-        # rejected at the --max-queue bound is backpressure: step the
-        # engine until the queue drains, then retry.
+        # rejected at the --max-queue bound is backpressure: back off
+        # proportionally to the engine's retry_after_hint (stepping while
+        # the hint window elapses) instead of retrying every step.
         rids = []
         for i, r in enumerate(reqs):
             while True:
@@ -315,7 +411,10 @@ def main():
                     break
                 except QueueFullError as e:
                     print(f"backpressure: {e}")
+                    hold = time.perf_counter() + (e.retry_after_hint or 0.0)
                     engine.step()
+                    while time.perf_counter() < hold and engine.step():
+                        pass
             rids.append(rid)
             engine.step()
             v = engine.poll(rid)
@@ -344,6 +443,16 @@ def main():
             extra += (f" rejected={s.rejected} expired={s.expired}"
                       f" aborted={s.aborted} cancelled={s.cancelled}"
                       f" snapshots={s.snapshots}")
+        if s.ttft_ms.count:
+            extra += (f" ttft-p50={s.ttft_ms.p50:.3g}ms"
+                      f" ttft-p99={s.ttft_ms.p99:.3g}ms")
+        for t in sorted(s.tenants):
+            ts = s.tenants[t]
+            extra += (f"\n  tenant {t}: submitted={ts.submitted} "
+                      f"completed={ts.completed} tokens={ts.tokens} "
+                      f"rejected={ts.rejected}"
+                      + (f" ttft-p99={ts.ttft_ms.p99:.3g}ms"
+                         if ts.ttft_ms.count else ""))
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
           f"prefill compiles={engine.prefill_compiles} "
           f"decode compiles={engine.decode_compiles} "

@@ -170,22 +170,61 @@ faults, and overload the normal operating regime. The engine's contract:
 * **Snapshot/restore** — ``snapshot()`` serializes the complete serving
   state (slot table, scheduler queue, per-request outputs and RNG states,
   prefix index, KV cache) through ``ft.checkpoint``'s atomic machinery;
-  ``snapshot_every`` automates it at step boundaries. After an
+  ``snapshot_every`` automates it at step boundaries (skipping an EMPTY
+  engine — a snapshot with nothing to resume is never written, and
+  ``restore()`` refuses one with an actionable error). After an
   engine-fatal error (``EngineFatalError`` — the engine refuses further
   work), a *replacement* engine with the same configuration calls
   ``restore()`` and resumes every in-flight decode mid-stream; decoding
   is deterministic (greedy argmax or counter-free per-request RNG whose
   state is captured), so outputs are bit-identical to an uninterrupted
   run (test-enforced).
+
+* **Tenancy** — every :class:`Request` bills to a ``tenant``; the
+  scheduler's ``fair`` policy keeps one FIFO queue per tenant and admits
+  by weighted deficit-round-robin (``tenant_weights``), so a bursty
+  tenant cannot starve the others: each backlogged tenant admits at
+  least one request per rotation and in the long run admissions track
+  the weights (±1 request per round, bench-enforced). ``EngineStats``
+  carries per-tenant counters (submitted/admitted/completed/rejected/
+  expired/cancelled/aborted/tokens) and a per-tenant TTFT histogram;
+  the fault injector's audit log names the tenants riding each launch.
+  Per-request outputs are tenant-independent — fairness reorders
+  admission, never the math.
+
+* **SLO instrumentation** — ``EngineStats.ttft_ms`` (submit → first
+  token) and ``tok_ms`` (inter-token gap) are streaming
+  :class:`LatencyHistogram` s over fixed log-spaced buckets: p50/p99
+  read in O(buckets), memory is constant, and ``snapshot()`` serializes
+  the bucket counts exactly — a restored engine reports the same
+  quantiles. The async front-end (``repro.serve.frontend``) maps
+  tenants to SLO *classes* (interactive/standard/batch) that default
+  ``deadline_ms`` and DRR weights, and enforces per-tenant token-bucket
+  admission upstream of the queue bound. ``QueueFullError`` carries
+  ``retry_after_hint`` (queue depth over the observed drain rate) so
+  shed callers back off proportionally instead of spinning.
+
+* **Self-healing** — ``repro.serve.supervisor.Supervisor`` owns the
+  engine lifecycle: it catches ``EngineFatalError`` mid-step, builds a
+  replacement engine from its factory, restores the latest snapshot,
+  re-submits in-flight work that post-dates the snapshot (rid-remapped),
+  and de-duplicates token emission against per-request high-water marks
+  so every stream is delivered at-most-once — zero duplicated and zero
+  lost tokens across a heal (chaos-tested). With a
+  ``repro.serve.prefix_store.PrefixStore`` attached, evicted prefix
+  donors spill to host memory and a replacement engine *adopts* the
+  hottest entries back into free slots, warm-starting on hot prompt
+  heads instead of cold-prefilling them.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import json
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -209,6 +248,8 @@ __all__ = [
     "Request",
     "RequestState",
     "Scheduler",
+    "LatencyHistogram",
+    "TenantStats",
     "EngineStats",
     "ServeEngine",
     "WaveEngine",
@@ -376,7 +417,13 @@ class Request:
     ``extra``: per-request conditioning for families whose runner declares
     ``requires_extra`` — for enc-dec configs, the encoder frame embeddings
     with shape ``(enc_seq, d_model)``. Decoder-only families must leave it
-    ``None`` (the runner's ``validate_request`` enforces both ways)."""
+    ``None`` (the runner's ``validate_request`` enforces both ways).
+
+    ``tenant``: the tenant the request bills to. Under the scheduler's
+    ``fair`` policy it keys the per-tenant DRR queue; per-tenant counters
+    and TTFT histograms in :class:`EngineStats` key on it under every
+    policy. The async front-end derives ``deadline_ms`` defaults and
+    token-bucket admission from the tenant's SLO class."""
 
     prompt: np.ndarray
     max_new: int = 16
@@ -385,11 +432,15 @@ class Request:
         default_factory=SamplingParams)
     deadline_ms: Optional[float] = None
     extra: Optional[np.ndarray] = None
+    tenant: str = "default"
 
     def __post_init__(self):
         # accept any iterable of token ids but store a tuple, so equality,
         # hashing of the field, and `tok in stop_tokens` behave uniformly
         self.stop_tokens = tuple(int(t) for t in self.stop_tokens)
+        self.tenant = str(self.tenant)
+        if not self.tenant:
+            raise ValueError("tenant must be a non-empty string")
 
     @property
     def prompt_len(self) -> int:
@@ -439,26 +490,43 @@ def _validate_request(r: Request, cache_len: int) -> None:
 
 
 class Scheduler:
-    """Admission queue: ``fifo`` or ``sjf`` (shortest-prompt-first).
+    """Admission queue: ``fifo``, ``sjf`` (shortest-prompt-first), or
+    ``fair`` (weighted deficit-round-robin across tenants).
 
     SJF groups short prompts into the same admission round, which tends to
     land them in one prefill bucket (fewer, fuller launches); FIFO preserves
-    arrival order. Per-request outputs are identical under either policy —
-    slots are independent — only throughput/latency ordering changes.
+    arrival order. ``fair`` keeps one FIFO queue per ``Request.tenant`` and
+    admits by deficit-round-robin: each rotation visit grants a tenant its
+    ``tenant_weights`` quantum (default 1), so a backlogged tenant admits
+    requests proportional to its weight and no tenant starves — every
+    backlogged tenant receives at least one admission per full rotation.
+    Per-request outputs are identical under every policy — slots are
+    independent — only throughput/latency ordering changes.
 
     ``max_queue`` bounds the queue depth (load shedding): a ``submit`` at
     the bound either raises :class:`QueueFullError` (``shed_policy
-    "reject"`` — backpressure, the item is NOT enqueued) or sheds the
-    longest-queued item to make room (``"drop-oldest"``, returned to the
-    caller to finalize). ``None`` (default) keeps the queue unbounded.
+    "reject"`` — backpressure, the item is NOT enqueued; carries the
+    engine's ``retry_after_hint`` when a ``retry_hint`` callable is wired)
+    or sheds the longest-queued item to make room (``"drop-oldest"``,
+    returned to the caller to finalize). ``None`` (default) keeps the
+    queue unbounded.
+
+    Internals: live items sit in ``_entries`` (seq -> entry); the policy
+    heap (fifo/sjf), the per-tenant deques (fair), and the arrival-order
+    heap that serves ``drop_oldest`` all hold *seqs* and delete lazily —
+    dead seqs are skipped when popped. ``drop_oldest`` is therefore
+    O(log n) amortized (one lazy heap pop) instead of the old O(n) scan +
+    ``heapify`` per shed, which made sustained overload quadratic.
     """
 
-    POLICIES = ("fifo", "sjf")
+    POLICIES = ("fifo", "sjf", "fair")
     SHED_POLICIES = ("reject", "drop-oldest")
 
     def __init__(self, policy: str = "fifo",
                  max_queue: Optional[int] = None,
-                 shed_policy: str = "reject"):
+                 shed_policy: str = "reject",
+                 tenant_weights: Optional[Dict[str, int]] = None,
+                 retry_hint=None):
         if policy not in self.POLICIES:
             raise ValueError(
                 f"unknown scheduler policy {policy!r}; one of {self.POLICIES}"
@@ -471,69 +539,274 @@ class Scheduler:
         if max_queue is not None and int(max_queue) < 1:
             raise ValueError(f"max_queue must be >= 1 (or None for "
                              f"unbounded), got {max_queue}")
+        if tenant_weights:
+            if policy != "fair":
+                raise ValueError(
+                    f"tenant_weights only apply to the 'fair' policy "
+                    f"(got policy={policy!r})")
+            for t, w in tenant_weights.items():
+                if int(w) < 1:
+                    raise ValueError(
+                        f"tenant weight must be >= 1; got {t!r}: {w}")
         self.policy = policy
         self.max_queue = None if max_queue is None else int(max_queue)
         self.shed_policy = shed_policy
-        self._heap: list = []
+        self.tenant_weights = {str(t): int(w)
+                               for t, w in (tenant_weights or {}).items()}
+        self.retry_hint = retry_hint     # zero-arg callable -> seconds|None
+        # seq -> (key, item, tenant, prompt_len); insertion order == queue
+        # identity for serialization (sorted by seq)
+        self._entries: Dict[int, Tuple[int, object, str, int]] = {}
+        self._order: list = []           # lazy heap of (key, seq) [fifo/sjf]
+        self._arrival: list = []         # lazy min-heap of seq [drop_oldest]
+        self._tq: Dict[str, object] = {}  # tenant -> deque of seq [fair]
+        self._deficit: Dict[str, float] = {}
+        self._rr: List[str] = []         # tenant rotation, first-seen order
+        self._rr_pos = 0
         self._seq = 0
         self._front = 0
 
-    def submit(self, item, prompt_len: int):
+    def _key(self, prompt_len: int) -> int:
+        return prompt_len if self.policy == "sjf" else 0
+
+    def _insert(self, seq: int, key: int, item, tenant: str,
+                prompt_len: int, *, front: bool = False) -> None:
+        self._entries[seq] = (key, item, tenant, prompt_len)
+        heapq.heappush(self._arrival, seq)
+        if self.policy == "fair":
+            q = self._tq.get(tenant)
+            if q is None:
+                q = self._tq[tenant] = deque()
+                self._deficit.setdefault(tenant, 0.0)
+                self._rr.append(tenant)
+            (q.appendleft if front else q.append)(seq)
+        else:
+            heapq.heappush(self._order, (key, seq))
+
+    def submit(self, item, prompt_len: int, tenant: str = "default"):
         """Enqueue; returns the item shed to make room (``drop-oldest`` at
         the bound) or None. Raises :class:`QueueFullError` at the bound
         under ``reject``."""
         dropped = None
-        if self.max_queue is not None and len(self._heap) >= self.max_queue:
+        if self.max_queue is not None \
+                and len(self._entries) >= self.max_queue:
             if self.shed_policy == "reject":
-                raise QueueFullError(len(self._heap), self.max_queue)
+                hint = self.retry_hint() if self.retry_hint else None
+                raise QueueFullError(len(self._entries), self.max_queue,
+                                     retry_after_hint=hint)
             dropped = self.drop_oldest()
-        key = prompt_len if self.policy == "sjf" else 0
-        heapq.heappush(self._heap, (key, self._seq, item))
+        self._insert(self._seq, self._key(prompt_len), item, str(tenant),
+                     prompt_len)
         self._seq += 1
         return dropped
 
     def drop_oldest(self):
         """Remove and return the longest-queued item (smallest sequence
-        number — arrival order, regardless of policy key)."""
-        if not self._heap:
-            raise IndexError("drop_oldest on an empty queue")
-        e = min(self._heap, key=lambda t: t[1])
-        self._heap.remove(e)
-        heapq.heapify(self._heap)
-        return e[2]
+        number — arrival order, regardless of policy). O(log n) amortized:
+        one lazy pop from the arrival heap; the policy-side reference dies
+        lazily."""
+        while self._arrival:
+            seq = heapq.heappop(self._arrival)
+            e = self._entries.pop(seq, None)
+            if e is not None:
+                return e[1]
+        raise IndexError("drop_oldest on an empty queue")
 
     def purge(self, keep) -> int:
         """Drop every queued item for which ``keep(item)`` is false
         (stale entries: requests cancelled/expired while queued). Returns
-        the number dropped."""
-        alive = [e for e in self._heap if keep(e[2])]
-        n = len(self._heap) - len(alive)
-        if n:
-            self._heap = alive
-            heapq.heapify(self._heap)
-        return n
+        the number dropped. Heap/deque references die lazily."""
+        dead = [seq for seq, e in self._entries.items() if not keep(e[1])]
+        for seq in dead:
+            del self._entries[seq]
+        return len(dead)
 
-    def put_front(self, item, prompt_len: int) -> None:
+    def put_front(self, item, prompt_len: int,
+                  tenant: str = "default") -> None:
         """Re-enqueue ahead of every same-key item (deferred admissions:
         a request bumped out of a round goes back to the head of the line,
-        not the tail)."""
-        key = prompt_len if self.policy == "sjf" else 0
+        not the tail). Under ``fair`` the item returns to the head of its
+        tenant's queue (its DRR quantum was already charged when first
+        taken)."""
         self._front -= 1
-        heapq.heappush(self._heap, (key, self._front, item))
+        self._insert(self._front, self._key(prompt_len), item, str(tenant),
+                     prompt_len, front=True)
 
-    def take(self, n: int) -> list:
+    def _take_ordered(self, n: int) -> list:
         out = []
-        while self._heap and len(out) < n:
-            out.append(heapq.heappop(self._heap)[2])
+        while self._order and len(out) < n:
+            _, seq = heapq.heappop(self._order)
+            e = self._entries.pop(seq, None)
+            if e is not None:
+                out.append(e[1])
         return out
 
+    def _take_fair(self, n: int) -> list:
+        out = []
+        while self._entries and len(out) < n:
+            t = self._rr[self._rr_pos % len(self._rr)]
+            self._rr_pos = (self._rr_pos + 1) % len(self._rr)
+            q = self._tq[t]
+            while q and q[0] not in self._entries:
+                q.popleft()              # lazy-deleted (purged/shed) seqs
+            if not q:
+                # an idle tenant banks no deficit: credit accrues only
+                # while backlogged, so a returning tenant cannot burst
+                # past its weight
+                self._deficit[t] = 0.0
+                continue
+            self._deficit[t] += float(self.tenant_weights.get(t, 1))
+            while q and len(out) < n and self._deficit[t] >= 1.0:
+                seq = q.popleft()
+                e = self._entries.pop(seq, None)
+                if e is None:
+                    continue
+                out.append(e[1])
+                self._deficit[t] -= 1.0
+            while q and q[0] not in self._entries:
+                q.popleft()
+            if not q:
+                self._deficit[t] = 0.0
+        return out
+
+    def take(self, n: int) -> list:
+        if self.policy == "fair":
+            return self._take_fair(n)
+        return self._take_ordered(n)
+
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._entries)
+
+    # -- serialization (engine snapshot/restore) ----------------------------
+    def state_dict(self) -> Dict[str, object]:
+        """Everything needed to rebuild the queue bit-identically: live
+        entries (sorted by seq — negative front-pushed seqs order ahead of
+        arrivals, most recent first, matching deque/heap pop order) plus
+        the DRR rotation state. Items must be JSON-serializable (the
+        engine queues int rids)."""
+        return {
+            "entries": [[int(seq), int(e[0]), e[1], e[2], int(e[3])]
+                        for seq, e in sorted(self._entries.items())],
+            "seq": int(self._seq),
+            "front": int(self._front),
+            "deficit": [[t, float(d)]
+                        for t, d in sorted(self._deficit.items())],
+            "rr": list(self._rr),
+            "rr_pos": int(self._rr_pos),
+        }
+
+    def load_state(self, d: Dict[str, object]) -> None:
+        """Inverse of :meth:`state_dict` into a fresh scheduler."""
+        if self._entries:
+            raise RuntimeError("load_state needs an empty scheduler")
+        self._seq = int(d["seq"])
+        self._front = int(d["front"])
+        # seed the rotation before re-inserting so first-seen order (and
+        # therefore the DRR visit order) survives even for tenants whose
+        # entries were all consumed
+        for t in d.get("rr", []):
+            if self.policy == "fair" and t not in self._tq:
+                self._tq[t] = deque()
+                self._deficit.setdefault(t, 0.0)
+                self._rr.append(t)
+        for seq, key, item, tenant, plen in d["entries"]:
+            self._insert(int(seq), int(key), item, str(tenant), int(plen))
+        for t, dv in d.get("deficit", []):
+            if t in self._deficit or self.policy != "fair":
+                self._deficit[t] = float(dv)
+        self._rr_pos = int(d.get("rr_pos", 0))
 
 
 # ---------------------------------------------------------------------------
 # Stats
 # ---------------------------------------------------------------------------
+
+
+class LatencyHistogram:
+    """Streaming latency histogram over FIXED log-spaced millisecond
+    buckets (1-2-5 series, 10µs..100s, plus overflow), so p50/p99 are
+    O(buckets) to read, memory is constant regardless of traffic, and
+    ``snapshot()`` serializes the counts exactly (restore resumes the same
+    distribution — no reservoir to resample). Quantiles return the upper
+    bound of the covering bucket: an upper estimate, bounded-error by the
+    bucket spacing (≤ 2.5× the true value), which is what an SLO check
+    needs — a reported p99 under the target guarantees the true p99 is."""
+
+    BOUNDS_MS: Tuple[float, ...] = tuple(
+        m * (10.0 ** e) for e in range(-2, 5) for m in (1.0, 2.0, 5.0)
+    ) + (1e5,)
+
+    def __init__(self, counts: Optional[Sequence[int]] = None):
+        n = len(self.BOUNDS_MS) + 1          # + overflow bucket
+        if counts is None:
+            self.counts = [0] * n
+        else:
+            if len(counts) != n:
+                raise ValueError(
+                    f"LatencyHistogram needs {n} bucket counts, "
+                    f"got {len(counts)} — snapshot from a different "
+                    f"bucket layout")
+            self.counts = [int(c) for c in counts]
+
+    @property
+    def count(self) -> int:
+        return sum(self.counts)
+
+    def observe(self, ms: float) -> None:
+        self.counts[bisect.bisect_left(self.BOUNDS_MS, float(ms))] += 1
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Upper bound of the bucket containing the q-quantile (``None``
+        on an empty histogram; ``inf`` when it falls in overflow)."""
+        total = self.count
+        if total == 0:
+            return None
+        target = q * total
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                return (self.BOUNDS_MS[i] if i < len(self.BOUNDS_MS)
+                        else float("inf"))
+        return float("inf")
+
+    @property
+    def p50(self) -> Optional[float]:
+        return self.quantile(0.50)
+
+    @property
+    def p99(self) -> Optional[float]:
+        return self.quantile(0.99)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"count": self.count, "p50_ms": self.p50, "p99_ms": self.p99}
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant slice of the engine counters plus a TTFT histogram —
+    the fairness/SLO evidence (``serve_bench --workload tenants`` asserts
+    completed-request shares against the DRR weights from these)."""
+
+    submitted: int = 0
+    admitted: int = 0                      # taken from the queue into a slot
+    completed: int = 0
+    rejected: int = 0
+    expired: int = 0
+    cancelled: int = 0
+    aborted: int = 0
+    tokens: int = 0
+    ttft_ms: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "submitted": self.submitted, "admitted": self.admitted,
+            "completed": self.completed, "rejected": self.rejected,
+            "expired": self.expired, "cancelled": self.cancelled,
+            "aborted": self.aborted, "tokens": self.tokens,
+            "ttft": self.ttft_ms.as_dict(),
+        }
 
 
 @dataclasses.dataclass
@@ -559,9 +832,26 @@ class EngineStats:
     snapshots: int = 0                     # snapshot() calls
     launch_retries: int = 0                # transient decode launches retried
     slow_steps: int = 0                    # straggler-watchdog flagged steps
+    prefix_spills: int = 0                 # evicted donors spilled to store
+    prefix_adoptions: int = 0              # store entries adopted into slots
     prefill_shapes: Set[Tuple[int, int]] = dataclasses.field(
         default_factory=set)
     decode_shapes: Set[int] = dataclasses.field(default_factory=set)
+    # SLO instrumentation: streaming p50/p99 over fixed buckets, so the
+    # histograms serialize exactly through snapshot()/restore()
+    ttft_ms: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)      # submit -> first token
+    tok_ms: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)      # inter-token (decode) gap
+    tenants: Dict[str, TenantStats] = dataclasses.field(
+        default_factory=dict)
+
+    def tenant(self, name: str) -> TenantStats:
+        """Get-or-create the per-tenant slice."""
+        ts = self.tenants.get(name)
+        if ts is None:
+            ts = self.tenants[name] = TenantStats()
+        return ts
 
     @property
     def tokens_per_decode_step(self) -> float:
@@ -591,12 +881,19 @@ class EngineStats:
         return self.prefix_hits / self.prefix_lookups
 
     def as_dict(self) -> Dict[str, object]:
-        d = dataclasses.asdict(self)
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)
+             if f.name not in ("prefill_shapes", "decode_shapes",
+                               "ttft_ms", "tok_ms", "tenants")}
         d["prefill_shapes"] = sorted(self.prefill_shapes)
         d["decode_shapes"] = sorted(self.decode_shapes)
         d["tokens_per_decode_step"] = self.tokens_per_decode_step
         d["decode_rows_per_token"] = self.decode_rows_per_token
         d["prefix_hit_rate"] = self.prefix_hit_rate
+        d["ttft"] = self.ttft_ms.as_dict()
+        d["tok"] = self.tok_ms.as_dict()
+        d["tenants"] = {t: ts.as_dict()
+                        for t, ts in sorted(self.tenants.items())}
         return d
 
 
@@ -688,9 +985,12 @@ class ServeEngine:
                  snapshot_every: int = 0,
                  fault_injector=None,
                  clock=time.monotonic,
-                 quantize: str = "off"):
+                 quantize: str = "off",
+                 tenant_weights: Optional[Dict[str, int]] = None,
+                 prefix_store=None):
         # fail fast on unknown policies / bad bounds (before param freeze)
-        Scheduler(policy, max_queue=max_queue, shed_policy=shed_policy)
+        Scheduler(policy, max_queue=max_queue, shed_policy=shed_policy,
+                  tenant_weights=tenant_weights)
         if int(snapshot_every) < 0:
             raise ValueError(
                 f"snapshot_every must be >= 0, got {snapshot_every}")
@@ -732,6 +1032,11 @@ class ServeEngine:
                     f"prefix_cache=True is unsupported for "
                     f"{type(self.runner).__name__}: "
                     f"{self.runner.prefix_cache_unsupported_reason}")
+        if prefix_store is not None and not self.prefix_cache:
+            raise ValueError(
+                "prefix_store needs prefix_cache=True: the store spills "
+                "and adopts prefix-index donor rows, which only exist "
+                "with the prefix cache on")
         self.donate = bool(donate)
         if prompt_buckets is None:
             prompt_buckets = pow2_buckets(min(8, self.cache_len),
@@ -763,17 +1068,32 @@ class ServeEngine:
         # injectable clock (deadlines/watchdog), snapshot policy
         self.max_queue = None if max_queue is None else int(max_queue)
         self.shed_policy = shed_policy
+        self.tenant_weights = {str(t): int(w)
+                               for t, w in (tenant_weights or {}).items()}
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = int(snapshot_every)
         self.faults = fault_injector
+        self.prefix_store = prefix_store
         self._clock_fn = clock
         self._watchdog = StragglerWatchdog()
         self._fatal: Optional[str] = None
         self._step_count = 0
+        # drain-rate estimate (terminals/sec EWMA) backing QueueFullError's
+        # retry_after_hint; per-rid submit/last-token times feed the TTFT
+        # and inter-token latency histograms
+        self._drain_rate = 0.0
+        self._prev_step_t: Optional[float] = None
+        self._prev_terminals = 0
+        self._terminals = 0
+        self._submit_t: Dict[int, float] = {}
+        self._last_tok_t: Dict[int, float] = {}
+        self._store_fp: Optional[str] = None
         # streaming state: queued/running outputs, claimed-on-drain results,
         # lifecycle status/error, absolute deadlines, rid -> slot map
         self._sched = Scheduler(self.policy, max_queue=self.max_queue,
-                                shed_policy=self.shed_policy)
+                                shed_policy=self.shed_policy,
+                                tenant_weights=self.tenant_weights,
+                                retry_hint=self.retry_after_hint)
         self._next_rid = 0
         self._req: Dict[int, Request] = {}
         self._out: Dict[int, List[int]] = {}
@@ -823,17 +1143,32 @@ class ServeEngine:
         self._clock = 0
 
     # -- prefix index -------------------------------------------------------
-    def _index_drop_slot(self, slot: int) -> None:
+    def _index_drop_slot(self, slot: int, *, spill: bool = True) -> None:
         """Evict a slot's rows from the prefix index — called exactly when
         the rows are about to be overwritten (slot reassigned to a new
         request, or borrowed as a decode pad lane). Rows referenced by an
-        in-flight prefill are pinned and must never get here."""
+        in-flight prefill are pinned and must never get here.
+
+        With a ``prefix_store`` attached the evicted donor's rows are
+        spilled to the host store first (this is the last moment they are
+        readable — the overwrite follows immediately), except when
+        ``spill=False``: scrub paths evict *poisoned* rows that must not
+        outlive the engine."""
         assert self._slot_refs[slot] == 0, (
             f"evicting donor slot {slot} with {self._slot_refs[slot]} "
             f"in-flight references"
         )
         if self._slot_prompt[slot] is None:
             return
+        if spill and self.prefix_store is not None:
+            rows = jax.tree_util.tree_map(
+                np.asarray,
+                self.runner.gather_state(
+                    self.cache, jnp.asarray([slot], jnp.int32)))
+            if self.prefix_store.put(self._slot_prompt[slot],
+                                     flatten_state_tree(rows),
+                                     self._store_fingerprint()):
+                self.stats.prefix_spills += 1
         self._slot_prompt[slot] = None
         for key in [k for k, s in self._prefix_index.items() if s == slot]:
             del self._prefix_index[key]
@@ -886,6 +1221,106 @@ class ServeEngine:
             m -= self.prefix_block
         return None, 0
 
+    def _store_fingerprint(self) -> str:
+        """Geometry identity for prefix-store entries: runner class,
+        cache_len, and the single-slot gathered-state leaf shapes/dtypes
+        (via ``eval_shape`` — no compute). Adopting rows produced under a
+        different geometry raises in the store instead of silently
+        placing mismatched state."""
+        if self._store_fp is None:
+            shaped = jax.eval_shape(
+                lambda c: self.runner.gather_state(
+                    c, jnp.zeros((1,), jnp.int32)), self.cache)
+            leaves = [(list(l.shape), str(l.dtype))
+                      for l in jax.tree_util.tree_leaves(shaped)]
+            self._store_fp = json.dumps(
+                {"runner": type(self.runner).__name__,
+                 "cache_len": self.cache_len, "leaves": leaves},
+                sort_keys=True)
+        return self._store_fp
+
+    def adopt_prefixes(self, max_slots: Optional[int] = None) -> int:
+        """Warm-start free slots from the attached ``prefix_store``:
+        place the hottest stored donor rows into unowned, unindexed,
+        unpinned slots and register them in the prefix index, so the next
+        admission round's ``_match_prefix`` finds them resident. Returns
+        the number of slots adopted. The supervisor calls this after
+        building/restoring a replacement engine; callers may also invoke
+        it on a cold engine before traffic.
+
+        Uses the same runner ops as serving (``place_state`` is the
+        prefill donor-copy primitive), so adopted rows are bit-identical
+        to the rows the original engine held — greedy outputs after a
+        prefix hit on an adopted donor match the original engine's.
+        """
+        self._check_alive()
+        if self.prefix_store is None or not self.prefix_cache:
+            return 0
+        budget = self.batch if max_slots is None else int(max_slots)
+        free = [s for s in range(self.batch)
+                if not self._active[s] and self._slot_refs[s] == 0
+                and self._slot_prompt[s] is None]
+        adopted = 0
+        for prompt, rows in self.prefix_store.hottest():
+            if not free or adopted >= budget:
+                break
+            if prompt.shape[0] > self.cache_len:
+                continue
+            # already resident? (a restored engine may still hold it)
+            raw = prompt.tobytes()
+            mtop = (prompt.shape[0] // self.prefix_block) \
+                * self.prefix_block
+            if mtop >= self.prefix_block and \
+                    (mtop, raw[: mtop * prompt.itemsize]) \
+                    in self._prefix_index:
+                continue
+            # geometry guard: the store fingerprint was checked at put
+            # time, but a hand-loaded store meets the engine here
+            self.prefix_store._check_fingerprint(
+                self._store_fingerprint(), "adopt")
+            sub = unflatten_state_tree(
+                self.runner.init_state(1),
+                {k: v for k, v in rows.items()})
+            slot = free.pop(0)
+            self.cache = self.runner.place_state(
+                self.cache, sub, jnp.asarray([slot], jnp.int32))
+            self._index_insert(slot, prompt)
+            self.prefix_store.touch(prompt)
+            adopted += 1
+            self.stats.prefix_adoptions += 1
+        return adopted
+
+    # -- backpressure -------------------------------------------------------
+    def retry_after_hint(self) -> Optional[float]:
+        """Estimated seconds until a queue slot frees: queue depth over
+        the recently-observed drain rate (terminals/sec EWMA across step
+        boundaries). ``None`` until the engine has observed any drain —
+        callers fall back to their own backoff. Attached to every
+        :class:`QueueFullError` the scheduler raises."""
+        if self._drain_rate <= 0.0:
+            return None
+        depth = max(1, len(self._sched))
+        return float(min(60.0, max(1e-3, depth / self._drain_rate)))
+
+    def _observe_drain(self, now: float) -> None:
+        """EWMA the terminal-completion rate at each step boundary.
+        Terminals accumulate until the clock actually advances (dt > 0) —
+        zero-dt steps must not swallow completions into the baseline, or
+        a whole burst finishing inside one clock tick would never
+        register as drain."""
+        if self._prev_step_t is None:
+            self._prev_step_t = now
+            return
+        dt = now - self._prev_step_t
+        if dt <= 0:
+            return
+        rate = (self._terminals - self._prev_terminals) / dt
+        a = 0.2
+        self._drain_rate = (rate if self._drain_rate == 0.0
+                            else a * rate + (1 - a) * self._drain_rate)
+        self._prev_step_t = now
+        self._prev_terminals = self._terminals
+
     def _validate(self, r: Request) -> None:
         _validate_request(r, self.cache_len)
         self.runner.validate_request(r)
@@ -934,21 +1369,34 @@ class ServeEngine:
             self._slot_req[slot] = None
             self._slot_rng[slot] = None
             if scrub:
-                self._index_drop_slot(slot)
+                # poisoned rows: never spill them to the prefix store
+                self._index_drop_slot(slot, spill=False)
                 self._scrub_slot(slot)
+        req = self._req.pop(rid, None)
         self._finished[rid] = self._out.pop(rid, [])
-        self._req.pop(rid, None)
         self._deadline.pop(rid, None)
+        self._submit_t.pop(rid, None)
+        self._last_tok_t.pop(rid, None)
         self._status[rid] = status
         self._error[rid] = error
+        self._terminals += 1
+        ts = (self.stats.tenant(req.tenant) if req is not None else None)
         if status == FINISHED:
             self.stats.requests_completed += 1
+            if ts is not None:
+                ts.completed += 1
         elif status == FAILED:
             self.stats.aborted += 1
+            if ts is not None:
+                ts.aborted += 1
         elif status == EXPIRED:
             self.stats.expired += 1
+            if ts is not None:
+                ts.expired += 1
         elif status == CANCELLED:
             self.stats.cancelled += 1
+            if ts is not None:
+                ts.cancelled += 1
 
     def _expire_overdue(self) -> None:
         """Step-boundary deadline watchdog: EXPIRE every request (queued or
@@ -971,8 +1419,23 @@ class ServeEngine:
         if r.stop_tokens and tok in r.stop_tokens:
             self._finalize(rid, FINISHED)
             return
+        # SLO instrumentation: first emitted token closes the TTFT window
+        # (submit -> first token); later tokens feed the inter-token gap
+        now = self._clock_fn()
+        if not self._out[rid]:
+            t0 = self._submit_t.get(rid)
+            if t0 is not None:
+                ttft = (now - t0) * 1e3
+                self.stats.ttft_ms.observe(ttft)
+                self.stats.tenant(r.tenant).ttft_ms.observe(ttft)
+        else:
+            tprev = self._last_tok_t.get(rid)
+            if tprev is not None:
+                self.stats.tok_ms.observe((now - tprev) * 1e3)
+        self._last_tok_t[rid] = now
         self._out[rid].append(tok)
         self.stats.tokens_generated += 1
+        self.stats.tenant(r.tenant).tokens += 1
         self._slot_last[slot] = tok
         self._slot_left[slot] -= 1
         if self._slot_left[slot] <= 0:
@@ -1040,8 +1503,22 @@ class ServeEngine:
         # deferred holds latest-taken first; pushing in that order leaves
         # the earliest-taken at the queue head (original order)
         for rid in deferred:
-            self._sched.put_front(rid, self._req[rid].prompt_len)
+            self._sched.put_front(rid, self._req[rid].prompt_len,
+                                  tenant=self._req[rid].tenant)
         return keep, avail, self_place
+
+    def _on_launch(self, kind: str, index: int, rids) -> None:
+        """Fault-injection hook with a tenant-aware audit: pass the sorted
+        tenant set riding in the launch when the injector understands it
+        (``accepts_tenants``); plain two-argument injectors keep working."""
+        if self.faults is None:
+            return
+        if getattr(self.faults, "accepts_tenants", False):
+            tenants = tuple(sorted({self._req[rid].tenant for rid in rids
+                                    if rid in self._req}))
+            self.faults.on_launch(kind, index, tenants=tenants)
+        else:
+            self.faults.on_launch(kind, index)
 
     def _admit(self) -> None:
         free = [i for i in range(self.batch) if not self._active[i]]
@@ -1136,9 +1613,8 @@ class ServeEngine:
                         np.asarray(self._req[rid].extra, np.float32)
                         for rid in chunk]))
                 try:
-                    if self.faults is not None:
-                        self.faults.on_launch("prefill",
-                                              self.stats.prefill_calls)
+                    self._on_launch("prefill", self.stats.prefill_calls,
+                                    chunk)
                     logits, ok, self.cache = self._prefill(
                         self.params, jnp.asarray(toks), jnp.asarray(pos),
                         self.cache,
@@ -1179,6 +1655,7 @@ class ServeEngine:
                                        "(request aborted; batch continues)")
                         continue
                     r = self._req[rid]
+                    self.stats.tenant(r.tenant).admitted += 1
                     self._index_insert(slot, prompts[j])
                     self._slot_req[slot] = rid
                     self._rid_slot[rid] = slot
@@ -1228,8 +1705,8 @@ class ServeEngine:
         attempt = 0
         while True:
             try:
-                if self.faults is not None:
-                    self.faults.on_launch("decode", self.stats.decode_steps)
+                self._on_launch("decode", self.stats.decode_steps,
+                                [self._slot_req[int(s)] for s in act])
                 logits, ok, self.cache = self._decode(
                     self.params, jnp.asarray(self._slot_last[idx][:, None]),
                     self.cache, jnp.asarray(self._slot_pos[idx]),
@@ -1336,13 +1813,17 @@ class ServeEngine:
             self._sched.purge(lambda rid: rid not in self._finished)
         rid = self._next_rid
         try:
-            dropped = self._sched.submit(rid, request.prompt_len)
+            dropped = self._sched.submit(rid, request.prompt_len,
+                                         tenant=request.tenant)
         except QueueFullError:
             self.stats.rejected += 1
+            self.stats.tenant(request.tenant).rejected += 1
             raise
         self._next_rid += 1
         self._req[rid] = request
         self._out[rid] = []
+        self._submit_t[rid] = self._clock_fn()
+        self.stats.tenant(request.tenant).submitted += 1
         if request.deadline_ms is not None:
             self._deadline[rid] = (self._clock_fn()
                                    + request.deadline_ms / 1000.0)
@@ -1380,11 +1861,17 @@ class ServeEngine:
         self._admit()
         self._decode_step()
         self._step_count += 1
-        if self._watchdog.observe(self._step_count,
-                                  self._clock_fn() - t0) != "ok":
+        now = self._clock_fn()
+        self._observe_drain(now)
+        if self._watchdog.observe(self._step_count, now - t0) != "ok":
             self.stats.slow_steps += 1
+        # auto-snapshot skips an EMPTY engine (no queued, running, or
+        # unclaimed requests): such a snapshot resumes nothing — restoring
+        # it is refused — and idle-loop callers would otherwise overwrite
+        # the last useful snapshot with a useless one
         if (self.snapshot_dir is not None and self.snapshot_every > 0
-                and self._step_count % self.snapshot_every == 0):
+                and self._step_count % self.snapshot_every == 0
+                and (self._req or self._finished)):
             self.snapshot()
         return bool(self._active.any() or len(self._sched))
 
@@ -1469,7 +1956,7 @@ class ServeEngine:
         "decode_rows", "prefix_lookups", "prefix_hits",
         "prefill_tokens_saved", "rejected", "aborted", "expired",
         "cancelled", "recoveries", "snapshots", "launch_retries",
-        "slow_steps",
+        "slow_steps", "prefix_spills", "prefix_adoptions",
     )
 
     def _fingerprint(self) -> Dict[str, object]:
@@ -1487,6 +1974,8 @@ class ServeEngine:
             "max_queue": self.max_queue,
             "shed_policy": self.shed_policy,
             "quantize": self.quantize,
+            "tenant_weights": [[k, int(v)] for k, v in
+                               sorted(self.tenant_weights.items())],
         }
 
     def frozen_table_bytes(self) -> int:
@@ -1518,7 +2007,7 @@ class ServeEngine:
         extra_rids = sorted(rid for rid, r in self._req.items()
                             if r.extra is not None)
         meta = {
-            "version": 2,
+            "version": 3,
             "fingerprint": self._fingerprint(),
             "step_count": self._step_count,
             "next_rid": self._next_rid,
@@ -1535,6 +2024,7 @@ class ServeEngine:
                         "top_k": int(r.sampling.top_k),
                         "seed": int(r.sampling.seed)},
                     "deadline_ms": r.deadline_ms,
+                    "tenant": r.tenant,
                 }] for rid, r in self._req.items()],
             "out": [[rid, list(t)] for rid, t in self._out.items()],
             "finished": [[rid, list(t), self._status.get(rid, FINISHED),
@@ -1542,10 +2032,15 @@ class ServeEngine:
                          for rid, t in self._finished.items()],
             "deadline_remaining_s": [[rid, max(0.0, t - now)]
                                      for rid, t in self._deadline.items()],
-            "sched": {"heap": [[int(k), int(s), int(item)]
-                               for (k, s, item) in self._sched._heap],
-                      "seq": int(self._sched._seq),
-                      "front": int(self._sched._front)},
+            # submit/last-token times as AGES (like deadlines): absolute
+            # clocks don't survive process boundaries, relative ones do
+            "timing": {
+                "submit_age_s": [[rid, now - t]
+                                 for rid, t in self._submit_t.items()],
+                "last_tok_age_s": [[rid, now - t]
+                                   for rid, t in self._last_tok_t.items()],
+            },
+            "sched": self._sched.state_dict(),
             "rid_slot": [[rid, int(s)] for rid, s in self._rid_slot.items()],
             "slots": {
                 "active": [bool(x) for x in self._active],
@@ -1570,6 +2065,18 @@ class ServeEngine:
                                   for b, s in self.stats.prefill_shapes),
                 "decode": sorted(int(b)
                                  for b in self.stats.decode_shapes)},
+            # fixed-bucket histograms serialize exactly: bucket counts in,
+            # bucket counts out — restore resumes the same p50/p99
+            "stats_hists": {
+                "ttft": list(self.stats.ttft_ms.counts),
+                "tok": list(self.stats.tok_ms.counts)},
+            "stats_tenants": [
+                [t, {"submitted": ts.submitted, "admitted": ts.admitted,
+                     "completed": ts.completed, "rejected": ts.rejected,
+                     "expired": ts.expired, "cancelled": ts.cancelled,
+                     "aborted": ts.aborted, "tokens": ts.tokens,
+                     "ttft": list(ts.ttft_ms.counts)}]
+                for t, ts in sorted(self.stats.tenants.items())],
         }
         # the state tree is serialized OPAQUELY — flat canonical leaf
         # order, no knowledge of the family's tree shape (KV-cache group
@@ -1613,6 +2120,12 @@ class ServeEngine:
                     f"no snapshot found in {self.snapshot_dir}")
         state = restore_checkpoint(self.snapshot_dir, int(step))
         meta = json.loads(bytes(np.asarray(state["meta"])).decode("utf-8"))
+        if int(meta.get("version", 0)) != 3:
+            raise ValueError(
+                f"snapshot at step {step} has format version "
+                f"{meta.get('version')!r}; this build reads version 3 "
+                f"(tenant-aware scheduler + latency histograms) — "
+                f"re-snapshot with the current build")
         fp = self._fingerprint()
         if meta["fingerprint"] != fp:
             raise ValueError(
@@ -1620,6 +2133,12 @@ class ServeEngine:
                 f"{meta['fingerprint']} vs this engine {fp} — restore "
                 f"needs an identically-configured engine"
             )
+        if not meta["requests"] and not meta["finished"]:
+            raise ValueError(
+                f"snapshot at step {step} is EMPTY (no queued, running, "
+                f"or unclaimed requests) — restoring it would resume "
+                f"nothing. Snapshot after work is submitted, or restore "
+                f"an earlier non-empty step explicitly")
         # rebuild the opaque state tree against the runner's template
         # (structure + dtypes — the checkpoint round-trips bf16 through
         # f32 files); leaf-count mismatches raise with the family named
@@ -1638,6 +2157,7 @@ class ServeEngine:
                     top_k=int(d["sampling"]["top_k"]),
                     seed=int(d["sampling"]["seed"])),
                 deadline_ms=d["deadline_ms"],
+                tenant=d.get("tenant", "default"),
             ) for rid, d in meta["requests"]}
         for rid in meta.get("extra_rids", []):
             self._req[int(rid)].extra = np.asarray(
@@ -1652,14 +2172,16 @@ class ServeEngine:
         now = self._clock_fn()
         self._deadline = {int(rid): now + float(rem)
                           for rid, rem in meta["deadline_remaining_s"]}
-        sc = meta["sched"]
+        tm = meta["timing"]
+        self._submit_t = {int(rid): now - float(age)
+                          for rid, age in tm["submit_age_s"]}
+        self._last_tok_t = {int(rid): now - float(age)
+                            for rid, age in tm["last_tok_age_s"]}
         self._sched = Scheduler(self.policy, max_queue=self.max_queue,
-                                shed_policy=self.shed_policy)
-        self._sched._heap = [(int(k), int(s), int(rid))
-                             for k, s, rid in sc["heap"]]
-        heapq.heapify(self._sched._heap)
-        self._sched._seq = int(sc["seq"])
-        self._sched._front = int(sc["front"])
+                                shed_policy=self.shed_policy,
+                                tenant_weights=self.tenant_weights,
+                                retry_hint=self.retry_after_hint)
+        self._sched.load_state(meta["sched"])
         self._rid_slot = {int(rid): int(s) for rid, s in meta["rid_slot"]}
         sl = meta["slots"]
         self._active = np.asarray(sl["active"], bool)
@@ -1689,6 +2211,21 @@ class ServeEngine:
             (int(b), int(s)) for b, s in meta["stats_shapes"]["prefill"]}
         self.stats.decode_shapes = {
             int(b) for b in meta["stats_shapes"]["decode"]}
+        hists = meta["stats_hists"]
+        self.stats.ttft_ms = LatencyHistogram(hists["ttft"])
+        self.stats.tok_ms = LatencyHistogram(hists["tok"])
+        self.stats.tenants = {}
+        for t, d in meta["stats_tenants"]:
+            ts = self.stats.tenant(t)
+            ts.submitted = int(d["submitted"])
+            ts.admitted = int(d["admitted"])
+            ts.completed = int(d["completed"])
+            ts.rejected = int(d["rejected"])
+            ts.expired = int(d["expired"])
+            ts.cancelled = int(d["cancelled"])
+            ts.aborted = int(d["aborted"])
+            ts.tokens = int(d["tokens"])
+            ts.ttft_ms = LatencyHistogram(d["ttft"])
         self.stats.recoveries += 1
         return int(step)
 

@@ -108,14 +108,25 @@ class QueueFullError(RuntimeError):
     """Reject-new load shedding: the admission queue is at ``max_queue``.
 
     Backpressure signal — the request was NOT enqueued; the caller should
-    retry after draining (``depth``/``max_queue`` say how far over)."""
+    retry after draining (``depth``/``max_queue`` say how far over).
+    ``retry_after_hint`` (seconds, or None before the engine has observed
+    any drain) estimates when a queue slot should free: queue depth over
+    the engine's recently-observed drain rate. Callers back off
+    proportionally instead of spinning — the async front-end and
+    ``launch/serve.py --stream`` both consume it."""
 
-    def __init__(self, depth: int, max_queue: int):
+    def __init__(self, depth: int, max_queue: int,
+                 retry_after_hint: Optional[float] = None):
         self.depth = int(depth)
         self.max_queue = int(max_queue)
+        self.retry_after_hint = (None if retry_after_hint is None
+                                 else float(retry_after_hint))
+        hint = ("" if self.retry_after_hint is None
+                else f" (retry_after_hint={self.retry_after_hint:.3g}s)")
         super().__init__(
             f"admission queue full ({depth} queued, max_queue={max_queue}); "
-            f"request rejected — retry after the engine drains (backpressure)"
+            f"request rejected — retry after the engine drains "
+            f"(backpressure){hint}"
         )
 
 
@@ -189,19 +200,34 @@ class ServeFaultInjector(FaultInjector):
       attempt time) at which :meth:`on_launch` raises a *transient*
       :class:`InjectedFault`. Each scheduled index fires at most once, so
       a retried decode launch succeeds on the second attempt.
-    * ``fatal_decode_at`` — decode launch indices raising
-      :class:`InjectedEngineFatal` (snapshot/restore recovery path).
+    * ``fatal_decode_at`` / ``fatal_prefill_at`` — launch indices raising
+      :class:`InjectedEngineFatal` (snapshot/restore recovery path; the
+      prefill schedule kills the engine mid-admission, exercising the
+      supervisor's re-queue of never-admitted work).
     * ``delay_at`` / ``delay_s`` — engine step indices at which
       :meth:`on_step` injects an artificial stall: advancing the supplied
       ``clock`` (a :class:`ManualClock`) when given, else sleeping.
     * ``p_fail`` / ``seed`` — seeded random transient launch failures on
       top of the explicit schedule; the same seed reproduces the same
       fault pattern exactly (test-enforced).
+
+    The audit trail is tenant-aware: the engine passes the set of tenants
+    implicated in each launch (``accepts_tenants`` advertises the richer
+    hook signature so hand-rolled injectors with the old two-argument
+    ``on_launch`` keep working), and every ``launch_log`` entry is
+    ``(kind, index, action, tenants)`` — a post-mortem can attribute an
+    injected fault to the tenant workload it hit.
     """
+
+    # the engine checks this before passing the ``tenants=`` kwarg, so
+    # injector subclasses that override the plain two-argument on_launch
+    # signature stay compatible
+    accepts_tenants = True
 
     def __init__(self, fail_prefill_at: Iterable[int] = (),
                  fail_decode_at: Iterable[int] = (),
                  fatal_decode_at: Iterable[int] = (),
+                 fatal_prefill_at: Iterable[int] = (),
                  delay_at: Iterable[int] = (), delay_s: float = 0.0,
                  p_fail: float = 0.0, seed: int = 0,
                  clock: Optional[ManualClock] = None):
@@ -210,8 +236,9 @@ class ServeFaultInjector(FaultInjector):
         self.fail_prefill_at = set(int(i) for i in fail_prefill_at)
         self.fail_decode_at = set(int(i) for i in fail_decode_at)
         self.fatal_decode_at = set(int(i) for i in fatal_decode_at)
+        self.fatal_prefill_at = set(int(i) for i in fatal_prefill_at)
         self.clock = clock
-        self.launch_log: list = []      # (kind, index, action) audit trail
+        self.launch_log: list = []  # (kind, index, action, tenants) audit
 
     # -- engine hooks -------------------------------------------------------
     def on_step(self, step: int) -> None:
@@ -222,28 +249,34 @@ class ServeFaultInjector(FaultInjector):
             else:
                 time.sleep(self.delay_s)
 
-    def on_launch(self, kind: str, index: int) -> None:
+    def on_launch(self, kind: str, index: int,
+                  tenants: Tuple[str, ...] = ()) -> None:
         """Called immediately BEFORE each prefill/decode launch (donated
         buffers still intact). Raises the scheduled fault, once per
-        scheduled (kind, index)."""
+        scheduled (kind, index). ``tenants`` names the tenants whose
+        requests ride in the launch (sorted; audit only — the schedule
+        never keys on it)."""
         key: Tuple[str, int] = (kind, int(index))
+        tenants = tuple(tenants)
         if key in self.fired:
             return
-        if kind == "decode" and index in self.fatal_decode_at:
+        fatal: Set[int] = (self.fatal_prefill_at if kind == "prefill"
+                           else self.fatal_decode_at)
+        if index in fatal:
             self.fired.add(key)
-            self.launch_log.append((kind, index, "fatal"))
+            self.launch_log.append((kind, index, "fatal", tenants))
             raise InjectedEngineFatal(
-                f"injected engine-fatal fault at decode launch {index}")
+                f"injected engine-fatal fault at {kind} launch {index}")
         sched: Set[int] = (self.fail_prefill_at if kind == "prefill"
                            else self.fail_decode_at)
         if index in sched:
             self.fired.add(key)
-            self.launch_log.append((kind, index, "fail"))
+            self.launch_log.append((kind, index, "fail", tenants))
             raise InjectedFault(
                 f"injected {kind} launch failure at launch {index}")
         if self.p_fail > 0.0 and self.rng.random() < self.p_fail:
             self.fired.add(key)
-            self.launch_log.append((kind, index, "fail"))
+            self.launch_log.append((kind, index, "fail", tenants))
             raise InjectedFault(
                 f"injected random {kind} launch failure at launch {index}")
-        self.launch_log.append((kind, index, "ok"))
+        self.launch_log.append((kind, index, "ok", tenants))

@@ -1,0 +1,367 @@
+"""Self-healing supervision and the persistent prefix store.
+
+The acceptance chaos test drives a 3-tenant bursty workload through the
+supervised fair engine, kills the engine mid-stream with an injected
+fatal, and asserts the full contract: the supervisor restores the latest
+snapshot onto a fresh engine, re-queues post-snapshot in-flight work,
+every request's incrementally-collected token stream is bit-identical to
+the fault-free run (zero duplicated or lost tokens), no tenant is
+starved at a DRR round boundary, TTFT histograms ride through
+snapshot/restore, and the compile budget is unchanged.
+"""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig, SWMConfig
+from repro.ft.checkpoint import available_steps, save_checkpoint
+from repro.models.decoder import HybridDecoderLM
+from repro.nn.module import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.guard import (TERMINAL_STATES, ManualClock,
+                               ServeFaultInjector)
+from repro.serve.prefix_store import PrefixStore
+from repro.serve.supervisor import Supervisor, SupervisorGaveUp
+
+jax.config.update("jax_platform_name", "cpu")
+
+BATCH, CACHE = 2, 32
+
+
+def _cfg(**kw):
+    base = dict(name="supervisor", n_layers=2, d_model=32, n_heads=2,
+                n_kv_heads=1, head_dim=16, d_ff=64, vocab=48, remat="none",
+                param_dtype="float32", compute_dtype="float32",
+                swm=SWMConfig(block_size=8, impl="dft"))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = _cfg()
+    model = HybridDecoderLM(cfg)
+    params = init_params(model.specs(), 0)
+    return cfg, model, params
+
+
+def _engine(lm, **kw):
+    cfg, model, params = lm
+    kw.setdefault("batch", BATCH)
+    kw.setdefault("cache_len", CACHE)
+    return ServeEngine(model, cfg, params, **kw)
+
+
+WEIGHTS = {"a": 2, "b": 1, "c": 1}
+
+
+def _tenant_reqs(seed, n_per, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(0, 48, size=5).astype(np.int32),
+                    max_new=max_new, tenant=t)
+            for t in sorted(WEIGHTS) for _ in range(n_per)]
+
+
+def _drive_supervised(sup, clk, srids, max_steps=600):
+    """Step to idle, collecting each request's at-most-once stream."""
+    streams = {r: [] for r in srids}
+    fair_at = None
+    sum_w = sum(WEIGHTS.values())
+    n_per = len(srids) // len(WEIGHTS)
+    steps = 0
+    while True:
+        alive = sup.step()
+        steps += 1
+        clk.advance(0.002)
+        for r in srids:
+            new, _ = sup.take_new_tokens(r)
+            streams[r].extend(new)
+        admitted = {t: ts.admitted for t, ts in sup.stats.tenants.items()}
+        total = sum(admitted.values())
+        if fair_at is None and \
+                2 * sum_w <= total <= len(WEIGHTS) * n_per - 2:
+            fair_at = dict(admitted)
+        if not alive:
+            break
+        assert steps < max_steps, "supervised engine hang"
+    return streams, fair_at, steps
+
+
+class TestSelfHealChaos:
+    @pytest.mark.timeout(300)
+    def test_midstream_fatal_full_contract(self, lm):
+        """The acceptance-criteria chaos test (see module docstring)."""
+        reqs = _tenant_reqs(0, 6)
+        base_eng = _engine(lm, policy="fair", tenant_weights=WEIGHTS)
+        base = base_eng.generate(reqs)
+
+        clk = ManualClock()
+        # the fairness window freezes at the first DRR boundary past two
+        # full rounds (~10 admissions); decode launch 20 is comfortably
+        # after that but mid-stream, so the heal cannot inflate the
+        # frozen per-tenant counts
+        inj = ServeFaultInjector(fatal_decode_at={20})
+        with tempfile.TemporaryDirectory() as snap_dir:
+            def factory():
+                return _engine(lm, policy="fair", tenant_weights=WEIGHTS,
+                               snapshot_dir=snap_dir, snapshot_every=2,
+                               clock=clk, fault_injector=inj)
+
+            sup = Supervisor(factory)
+            budget_p = sup.engine.max_prefill_variants
+            budget_d = sup.engine.max_decode_variants
+            srids = [sup.submit(r) for r in reqs]
+            streams, fair_at, _ = _drive_supervised(sup, clk, srids)
+
+            assert sup.restarts == 1
+            assert sup.stats.recoveries == 1
+            # zero duplicated or lost tokens: every stream bit-identical
+            # to the fault-free run
+            for i, r in enumerate(srids):
+                assert tuple(streams[r]) == tuple(base[i]), \
+                    f"request {i} stream diverged across the heal"
+            # no tenant starved at the DRR round boundary
+            assert fair_at is not None
+            total = sum(fair_at.values())
+            for t, w in WEIGHTS.items():
+                share = total * w / sum(WEIGHTS.values())
+                assert abs(fair_at.get(t, 0) - share) <= w + 1, \
+                    f"tenant {t} starved: {fair_at} at boundary {total}"
+            # TTFT instrumentation rode through snapshot/restore
+            assert sup.stats.ttft_ms.count == len(reqs)
+            assert sup.stats.ttft_ms.p99 is not None
+            # compile budget unchanged on the replacement engine
+            assert sup.engine.prefill_compiles <= budget_p
+            assert sup.engine.decode_compiles <= budget_d
+            # terminal claims by supervisor rid
+            out = sup.drain(srids)
+            assert [out[r] for r in srids] == [list(b) for b in base]
+
+    def test_fatal_during_prefill_requeues_unadmitted(self, lm):
+        reqs = _tenant_reqs(1, 2)
+        base = _engine(lm, policy="fair",
+                       tenant_weights=WEIGHTS).generate(reqs)
+        clk = ManualClock()
+        inj = ServeFaultInjector(fatal_prefill_at={1})
+        with tempfile.TemporaryDirectory() as snap_dir:
+            def factory():
+                return _engine(lm, policy="fair", tenant_weights=WEIGHTS,
+                               snapshot_dir=snap_dir, snapshot_every=1,
+                               clock=clk, fault_injector=inj)
+
+            sup = Supervisor(factory)
+            srids = [sup.submit(r) for r in reqs]
+            streams, _, _ = _drive_supervised(sup, clk, srids)
+            assert sup.restarts == 1
+            for i, r in enumerate(srids):
+                assert tuple(streams[r]) == tuple(base[i])
+
+    def test_gives_up_after_max_restarts(self, lm):
+        clk = ManualClock()
+        inj = ServeFaultInjector(fatal_decode_at={1, 3})
+        with tempfile.TemporaryDirectory() as snap_dir:
+            def factory():
+                return _engine(lm, snapshot_dir=snap_dir, snapshot_every=1,
+                               clock=clk, fault_injector=inj)
+
+            sup = Supervisor(factory, max_restarts=1)
+            srids = [sup.submit(r) for r in _tenant_reqs(2, 2, max_new=6)]
+            with pytest.raises(SupervisorGaveUp, match="max_restarts"):
+                for _ in range(200):
+                    sup.step()
+                    clk.advance(0.002)
+            assert sup.restarts == 2
+            # already-delivered tokens stay delivered: poll works on the
+            # dead engine and the at-most-once ledger is intact
+            delivered = []
+            for r in srids:
+                new, _ = sup.take_new_tokens(r)
+                delivered.extend(new)
+            assert delivered, "no tokens survived the give-up"
+
+    def test_requires_snapshot_dir_by_default(self, lm):
+        with pytest.raises(ValueError, match="snapshot_dir"):
+            Supervisor(lambda: _engine(lm))
+
+    def test_replay_from_scratch_mode(self, lm):
+        reqs = _tenant_reqs(3, 2)
+        base = _engine(lm, policy="fair",
+                       tenant_weights=WEIGHTS).generate(reqs)
+        clk = ManualClock()
+        inj = ServeFaultInjector(fatal_decode_at={5})
+
+        def factory():
+            return _engine(lm, policy="fair", tenant_weights=WEIGHTS,
+                           clock=clk, fault_injector=inj)
+
+        sup = Supervisor(factory, require_snapshots=False)
+        srids = [sup.submit(r) for r in reqs]
+        streams, _, _ = _drive_supervised(sup, clk, srids)
+        # no snapshot: the heal replays everything; at-most-once emission
+        # still yields each token exactly once
+        assert sup.restarts == 1
+        for i, r in enumerate(srids):
+            assert tuple(streams[r]) == tuple(base[i])
+
+    def test_heal_walks_past_corrupt_latest_snapshot(self, lm):
+        reqs = _tenant_reqs(4, 2)
+        base = _engine(lm, policy="fair",
+                       tenant_weights=WEIGHTS).generate(reqs)
+        clk = ManualClock()
+        inj = ServeFaultInjector(fatal_decode_at={6})
+        with tempfile.TemporaryDirectory() as snap_dir:
+            def factory():
+                eng = _engine(lm, policy="fair", tenant_weights=WEIGHTS,
+                              snapshot_dir=snap_dir, snapshot_every=2,
+                              clock=clk, fault_injector=inj)
+                return eng
+
+            sup = Supervisor(factory)
+            srids = [sup.submit(r) for r in reqs]
+            # run a few steps so real snapshots exist, then plant a
+            # corrupt snapshot as the newest step
+            for _ in range(4):
+                sup.step()
+                clk.advance(0.002)
+            good = available_steps(snap_dir)
+            assert good, "no snapshot written in 4 steps"
+            save_checkpoint(snap_dir, max(good) + 100,
+                            {"meta": np.zeros(3, np.uint8)})
+            streams, _, _ = _drive_supervised(sup, clk, srids)
+            assert sup.restarts == 1
+            for i, r in enumerate(srids):
+                assert tuple(streams[r]) == tuple(base[i]), \
+                    "heal did not fall back past the corrupt snapshot"
+
+
+class TestPrefixStore:
+    def _rows(self, val, n=64):
+        return {"s00000": np.full((n,), val, np.float32)}
+
+    def test_put_get_hottest_order(self):
+        st = PrefixStore(capacity_bytes=1 << 20)
+        p1 = np.asarray([1, 2, 3], np.int32)
+        p2 = np.asarray([4, 5], np.int32)
+        st.put(p1, self._rows(1.0), "fp")
+        st.put(p2, self._rows(2.0), "fp")
+        hot = [tuple(p.tolist()) for p, _ in st.hottest()]
+        assert hot == [(4, 5), (1, 2, 3)]     # MRU first
+        st.touch(p1)
+        hot = [tuple(p.tolist()) for p, _ in st.hottest()]
+        assert hot == [(1, 2, 3), (4, 5)]
+
+    def test_capacity_evicts_coldest(self):
+        entry = self._rows(0.0)
+        nb = int(np.asarray([0, 0], np.int32).nbytes
+                 + entry["s00000"].nbytes)
+        st = PrefixStore(capacity_bytes=2 * nb)
+        for i in range(3):
+            st.put(np.asarray([i, i], np.int32), self._rows(float(i)), "fp")
+        assert len(st) == 2 and st.evictions == 1
+        keys = [tuple(p.tolist()) for p, _ in st.hottest()]
+        assert (0, 0) not in keys             # coldest evicted
+
+    def test_oversize_entry_refused(self):
+        st = PrefixStore(capacity_bytes=16)
+        ok = st.put(np.asarray([1], np.int32), self._rows(0.0), "fp")
+        assert not ok and len(st) == 0
+
+    def test_fingerprint_mismatch_raises(self):
+        st = PrefixStore(capacity_bytes=1 << 20)
+        st.put(np.asarray([1], np.int32), self._rows(0.0), "geom-A")
+        with pytest.raises(ValueError, match="geometry"):
+            st.put(np.asarray([2], np.int32), self._rows(0.0), "geom-B")
+
+    def test_persistence_round_trip_preserves_lru(self):
+        with tempfile.TemporaryDirectory() as d:
+            st = PrefixStore(capacity_bytes=1 << 20, persist_dir=d)
+            for i in range(3):
+                st.put(np.asarray([i, i + 1], np.int32),
+                       self._rows(float(i)), "fp")
+            st.touch(np.asarray([0, 1], np.int32))   # make entry 0 hottest
+            st.save()
+            st2 = PrefixStore.load(d)
+            assert len(st2) == 3
+            assert st2.fingerprint == "fp"
+            hot = [tuple(p.tolist()) for p, _ in st2.hottest()]
+            assert hot[0] == (0, 1)                  # LRU order survives
+            (_, rows) = next(st2.hottest())
+            assert rows["s00000"][0] == 0.0
+
+    def test_load_empty_dir_gives_empty_store(self):
+        with tempfile.TemporaryDirectory() as d:
+            st = PrefixStore.load(d)
+            assert len(st) == 0 and st.persist_dir == d
+
+    def test_load_with_smaller_capacity_evicts(self):
+        entry = self._rows(0.0)
+        nb = int(np.asarray([0, 0], np.int32).nbytes
+                 + entry["s00000"].nbytes)
+        with tempfile.TemporaryDirectory() as d:
+            st = PrefixStore(capacity_bytes=4 * nb, persist_dir=d)
+            for i in range(3):
+                st.put(np.asarray([i, i], np.int32),
+                       self._rows(float(i)), "fp")
+            st.save()
+            st2 = PrefixStore.load(d, capacity_bytes=2 * nb)
+            assert len(st2) == 2
+            keys = [tuple(p.tolist()) for p, _ in st2.hottest()]
+            assert (0, 0) not in keys
+
+
+class TestPrefixSpillAdopt:
+    def test_cold_engine_warm_starts_from_store(self, lm):
+        store = PrefixStore(capacity_bytes=8 << 20)
+        rng = np.random.default_rng(0)
+        shared = rng.integers(0, 48, size=16).astype(np.int32)
+        reqs = [Request(np.concatenate(
+            [shared, rng.integers(0, 48, size=3).astype(np.int32)]),
+            max_new=4) for _ in range(3)]
+        hot = _engine(lm, prefix_cache=True, prefix_store=store)
+        out1 = hot.generate(reqs)
+        assert store.spills >= 1, "no donor rows spilled to the store"
+
+        cold = _engine(lm, prefix_cache=True, prefix_store=store)
+        adopted = cold.adopt_prefixes()
+        assert adopted >= 1
+        assert cold.stats.prefix_adoptions == adopted
+        out2 = cold.generate([Request(r.prompt, max_new=r.max_new)
+                              for r in reqs])
+        assert out2 == out1, "adopted prefix rows changed greedy outputs"
+        assert cold.stats.prefix_hits >= 1
+        assert cold.stats.prefill_tokens_saved > 0, \
+            "warm start saved no prefill work"
+
+    def test_store_requires_prefix_cache(self, lm):
+        with pytest.raises(ValueError, match="prefix"):
+            _engine(lm, prefix_store=PrefixStore())
+
+    def test_adopt_geometry_mismatch_raises(self, lm):
+        store = PrefixStore(capacity_bytes=8 << 20)
+        rng = np.random.default_rng(1)
+        shared = rng.integers(0, 48, size=16).astype(np.int32)
+        reqs = [Request(np.concatenate(
+            [shared, rng.integers(0, 48, size=2).astype(np.int32)]),
+            max_new=3) for _ in range(3)]
+        _engine(lm, prefix_cache=True, prefix_store=store).generate(reqs)
+        assert len(store) >= 1
+        other = _engine(lm, cache_len=CACHE * 2, prefix_cache=True,
+                        prefix_store=store)
+        with pytest.raises(ValueError, match="geometry"):
+            other.adopt_prefixes()
+
+
+class TestAvailableSteps:
+    def test_lists_complete_steps_only(self):
+        with tempfile.TemporaryDirectory() as d:
+            assert available_steps(d) == []
+            save_checkpoint(d, 3, {"x": np.zeros(2, np.float32)})
+            save_checkpoint(d, 7, {"x": np.zeros(2, np.float32)})
+            import os
+            os.makedirs(os.path.join(d, "step_00000009.tmp"))
+            os.makedirs(os.path.join(d, "step_junk"), exist_ok=True)
+            assert available_steps(d) == [3, 7]
