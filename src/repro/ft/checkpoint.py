@@ -221,6 +221,8 @@ class AsyncCheckpointer:
         def work():
             try:
                 save_checkpoint(self.ckpt_dir, step, host_state)
+            # lint: allow-broad-except — background writer thread; the
+            # error (whatever it is) must reach the caller on wait()
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
 

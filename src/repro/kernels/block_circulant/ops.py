@@ -68,62 +68,37 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # Structural jaxpr probes (shared by the test suite and kernel_bench): the
 # "no dense (P, Q) einsum in the train step" acceptance checks inspect
-# traced programs, not numerics.
+# traced programs, not numerics. Both are thin wrappers over the recursive
+# walker in ``repro.analysis.walker`` — one traversal, shared with the
+# contract auditor, that also descends while/cond/dict-valued sub-jaxprs
+# the old per-probe loops missed.
 # ---------------------------------------------------------------------------
-
-
-def _sub_jaxprs(val):
-    if hasattr(val, "eqns"):                    # Jaxpr
-        yield val
-    elif hasattr(val, "jaxpr"):                 # ClosedJaxpr
-        yield val.jaxpr
-    elif isinstance(val, (tuple, list)):
-        for v in val:
-            yield from _sub_jaxprs(v)
 
 
 def outer_dot_shapes(jaxpr) -> List[Tuple[int, ...]]:
     """Output shapes of every ``dot_general`` OUTSIDE pallas_call kernels.
 
-    Recurses through pjit/scan/custom-vjp sub-jaxprs but never into a
-    ``pallas_call`` body — contractions inside the kernel are tiled VMEM
-    work, not the dense XLA fallback. The kernel-backed-adjoint regressions
-    assert that none of the returned shapes spans a circulant layer's
-    (P, Q) block grid (the signature of the einsum weight adjoint).
+    Recurses through pjit/scan/while/cond/custom-vjp sub-jaxprs but never
+    into a ``pallas_call`` body — contractions inside the kernel are tiled
+    VMEM work, not the dense XLA fallback. The kernel-backed-adjoint
+    regressions assert that none of the returned shapes spans a circulant
+    layer's (P, Q) block grid (the signature of the einsum weight adjoint).
     """
-    out: List[Tuple[int, ...]] = []
+    from repro.analysis.walker import iter_eqns
 
-    def visit(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                continue
-            if eqn.primitive.name == "dot_general":
-                out.extend(tuple(v.aval.shape) for v in eqn.outvars)
-            for val in eqn.params.values():
-                for sub in _sub_jaxprs(val):
-                    visit(sub)
-
-    visit(getattr(jaxpr, "jaxpr", jaxpr))
-    return out
+    return [tuple(v.aval.shape)
+            for eqn in iter_eqns(jaxpr)
+            if eqn.primitive.name == "dot_general"
+            for v in eqn.outvars]
 
 
 def count_pallas_launches(jaxpr) -> int:
     """Number of ``pallas_call`` eqns anywhere in the (closed) jaxpr — one
     kernel launch per execution of the enclosing region."""
-    n = 0
+    from repro.analysis.walker import iter_eqns
 
-    def visit(jx):
-        nonlocal n
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-                continue
-            for val in eqn.params.values():
-                for sub in _sub_jaxprs(val):
-                    visit(sub)
-
-    visit(getattr(jaxpr, "jaxpr", jaxpr))
-    return n
+    return sum(1 for eqn in iter_eqns(jaxpr)
+               if eqn.primitive.name == "pallas_call")
 
 
 def _force_interpret() -> bool:
@@ -137,7 +112,7 @@ def _on_tpu() -> bool:
         return False
     try:
         return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover
+    except (RuntimeError, IndexError):  # pragma: no cover - no backend
         return False
 
 

@@ -105,7 +105,10 @@ def analyse(r: dict) -> dict:
     if "flops_n" not in pinfo:
         try:
             pinfo = _params_info(r["arch"])
-        except Exception:
+        except (KeyError, ImportError, AttributeError):
+            # unknown arch in an old artifact, or a registry module that
+            # moved since the dryrun was recorded — report zero MODEL_FLOPS
+            # rather than refusing to summarize the rest of the cell
             pinfo = {"flops_n": 0, "stored": 0}
     from repro.configs.base import SHAPES
     shape = SHAPES[r["shape"]]

@@ -125,6 +125,36 @@ snapshots host state, while the runner owns the per-slot device state tree
 and the prefill/decode executables — one engine serves every family in
 ``configs/`` (attention decoders, rwkv/mamba/jamba hybrids, MoE, enc-dec).
 
+Structural contracts (``repro.analysis``; run via ``ServeEngine.audit()``)
+--------------------------------------------------------------------------
+
+Every promise above that is *structural* — visible in the traced program
+rather than in its outputs — is gated declaratively by the jaxpr auditor
+(``repro.analysis.contracts``), one contract per compiled surface:
+
+* ``serve_prefill[B,S]`` / ``serve_decode[B]`` (one surface per bucketed
+  executable): ``NoWeightFFT`` — no fft over parameter-derived data, i.e.
+  the freeze-once promise holds in every trace (the ``paper``/``freq``
+  impls legitimately stream *activations* through rfft; ``pallas``/``dft``
+  additionally promise total ``NoFFT``); ``DenseFallbackDot`` — no
+  ``dot_general`` against a circulant layer's dense-equivalent kernel
+  (the silent O(n²) fallback); ``NoWeightConcat`` — fused QKV/gate tables
+  are pre-concatenated by ``freeze_params``, never stacked per trace.
+* ``serve_params``: ``QuantizedTableDtypes`` — frozen tables are int8 with
+  f32 per-block scales under ``quantize='int8'``, plain float under
+  ``'off'``.
+* ``serve_donation[prefill|decode]``: ``DonatedInputsAliased`` — the
+  lowered modules really record input-output aliasing for the donated
+  cache (donation silently not taking would re-materialize the cache
+  every step).
+* Cross-engine (CLI-level, ``audit_config``): launch parity — the int8
+  engine launches exactly as many Pallas kernels as the fp32 engine
+  (in-kernel dequant adds no launch).
+
+``audit()`` returns the violations; ``prewarm(audit=True)`` gates
+compilation on them (raises ``StructuralContractError``). CI runs
+``python -m repro.analysis --all-configs`` over every registry config.
+
 Failure semantics (the robustness layer; see ``repro.serve.guard``)
 -------------------------------------------------------------------
 
@@ -1619,6 +1649,8 @@ class ServeEngine:
                         self.params, jnp.asarray(toks), jnp.asarray(pos),
                         self.cache,
                         jnp.asarray(np.asarray(slots, np.int32)), **kw)
+                # lint: allow-broad-except — fault-isolation boundary:
+                # classify_error decides request-fatal vs engine-fatal
                 except BaseException as e:
                     if classify_error(e) != "request":
                         self._die(e)
@@ -1713,6 +1745,8 @@ class ServeEngine:
                     jnp.asarray(idx),
                 )
                 break
+            # lint: allow-broad-except — fault-isolation boundary:
+            # classify_error decides retry vs engine-fatal
             except BaseException as e:
                 if classify_error(e) != "request" or attempt >= 1:
                     self._die(e)
@@ -1738,13 +1772,33 @@ class ServeEngine:
                 continue
             self._push_token(slot, lg[j])
 
-    def prewarm(self) -> int:
+    def audit(self, raise_on_violation: bool = False):
+        """Run every single-engine structural contract (see the module
+        docstring's *Structural contracts* section) and return the
+        violations — an empty list is the pass condition. With
+        ``raise_on_violation=True`` a non-empty result raises
+        :class:`~repro.analysis.contracts.StructuralContractError` whose
+        message carries per-violation ``file:line`` provenance."""
+        from repro.analysis.contracts import (StructuralContractError,
+                                              audit_engine)
+
+        violations = audit_engine(self)
+        if raise_on_violation and violations:
+            raise StructuralContractError(violations)
+        return violations
+
+    def prewarm(self, audit: bool = False) -> int:
         """Compile every (batch-bucket, prompt-bucket) prefill executable
         plus every decode-bucket executable up front, so steady-state
         serving never recompiles. Possible precisely because the bucket
         grid is finite — the wave baseline has no analogue (one executable
         per distinct wave length it happens to see). Returns the number of
         live executables.
+
+        ``audit=True`` gates compilation on the structural contracts: the
+        bucketed executables are traced and audited first (``audit()``),
+        and any violation raises before a single XLA compile is spent on a
+        structurally broken program.
 
         Warm-up results are COMMITTED, not discarded: the cache argument is
         donated (``donate_argnums``), so the input buffer is invalid after
@@ -1761,6 +1815,8 @@ class ServeEngine:
                 "prewarm() requires an idle engine: warm-up launches commit "
                 "(masked) writes into slot rows that active requests own"
             )
+        if audit:
+            self.audit(raise_on_violation=True)
         if self.prefix_cache:
             for s in range(self.batch):
                 self._index_drop_slot(s)

@@ -30,7 +30,8 @@ __all__ = ["make_loss_fn", "make_train_step", "init_train_state",
            "make_grad_step"]
 
 
-def make_grad_step(loss_fn: Callable, lr: float = 0.1):
+def make_grad_step(loss_fn: Callable, lr: float = 0.1,
+                   audit_args=None, audit_rules=None):
     """Minimal jitted SGD step over a bare ``loss_fn(params, batch)``.
 
     The train-step harness used by the backward-path structural
@@ -39,17 +40,40 @@ def make_grad_step(loss_fn: Callable, lr: float = 0.1):
     parameter update, so the cached step's jaxpr exposes exactly the
     forward + adjoint computation (e.g. asserting the block-circulant
     weight adjoint runs as a Pallas launch, never a dense (P, Q) einsum).
+
+    ``audit_args=(params, batch)`` gates construction on the train-step
+    structural contract: the full step (value_and_grad + update) is traced
+    and audited before anything compiles, raising
+    :class:`~repro.analysis.contracts.StructuralContractError` with
+    ``file:line`` provenance on any violation. ``audit_rules`` overrides
+    the default rule set (``NoFFT`` + ``NoDenseDotGeneral`` — right for
+    plan-path losses, where the adjoint must stay kernel-only).
     """
 
-    @jax.jit
-    def step(params, batch):
+    def raw_step(params, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         new_params = jax.tree.map(
             lambda p, g: p - lr * g.astype(p.dtype), params, grads
         )
         return new_params, loss
 
-    return step
+    if audit_args is not None:
+        _audit_step(raw_step, audit_args, audit_rules, name="grad_step")
+    return jax.jit(raw_step)
+
+
+def _audit_step(step_fn, audit_args, audit_rules, name: str):
+    """Trace an unjitted step and run the train-step structural contract."""
+    from repro.analysis.contracts import (Contract, StructuralContractError,
+                                          run_contract)
+    from repro.analysis.rules import NoDenseDotGeneral, NoFFT
+
+    rules = (tuple(audit_rules) if audit_rules is not None
+             else (NoFFT(), NoDenseDotGeneral()))
+    jp = jax.make_jaxpr(step_fn)(*audit_args)
+    violations = run_contract(Contract(name=name, rules=rules), jp)
+    if violations:
+        raise StructuralContractError(violations)
 
 
 def make_loss_fn(model, cfg: ModelConfig, tcfg: TrainConfig):
@@ -107,7 +131,16 @@ def init_train_state(params, tcfg: TrainConfig, optimizer: str = "adamw"):
     }
 
 
-def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig, mesh=None,
+                    audit_args=None, audit_rules=None):
+    """Full production step. ``audit_args=(state, batch)`` audits the traced
+    step before first compile — default rules are impl-aware: every SWM
+    config gets ``DenseFallbackDot`` (no contraction against a circulant
+    layer's dense-equivalent kernel; state-derived operands only, so
+    activations pass), and kernel-/DFT-backed impls additionally get total
+    ``NoFFT``. The ``paper``/``freq`` impls transform weights per forward
+    *by design during training* — freezing happens at serve — so no
+    weight-fft rule applies here."""
     loss_fn = make_loss_fn(model, cfg, tcfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -175,4 +208,23 @@ def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
         metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
         return new_state, metrics
 
+    if audit_args is not None:
+        rules = audit_rules
+        if rules is None:
+            from repro.analysis.contracts import (FFT_FREE_IMPLS,
+                                                  dense_equivalent_shapes)
+            from repro.analysis.rules import DenseFallbackDot, NoFFT
+            rules = []
+            if cfg.swm.enabled:
+                # state leaves (params + opt moments) lead the flattened
+                # invars — all weight-derived for taint purposes
+                n_state = len(jax.tree.leaves(audit_args[0]))
+                rules.append(DenseFallbackDot(
+                    dense_equivalent_shapes(model.specs()),
+                    n_param_invars=n_state))
+                if cfg.swm.impl in FFT_FREE_IMPLS:
+                    rules.append(NoFFT())
+        if rules:
+            _audit_step(train_step, audit_args, tuple(rules),
+                        name="train_step")
     return train_step

@@ -31,6 +31,7 @@ from repro.core.quant import (default_exempt, dequantize_symmetric,
                               symmetric_scales)
 from repro.kernels.block_circulant import (block_circulant_matmul,
                                            build_plan, freq_weights)
+from repro.analysis import NoFFT, QuantizedTableDtypes
 from repro.kernels.block_circulant.ops import count_pallas_launches
 from repro.kernels.block_circulant.plan import (FUSED_KEY, dequantize_frozen,
                                                 freeze_params,
@@ -122,7 +123,7 @@ def test_quantized_plan_bitwise_and_structural(B, p, q, k):
     jp_q = jax.make_jaxpr(plan_q.apply)(x)
     assert count_pallas_launches(jp_q) == count_pallas_launches(
         jax.make_jaxpr(plan_f.apply)(x)), "dequant must not add a launch"
-    assert "fft" not in str(jp_q)
+    assert NoFFT().check(jp_q) == []
     ratio = plan_q.table_bytes() / plan_f.table_bytes()
     assert ratio <= 0.55, f"int8 tables at {ratio:.3f}x fp32 bytes"
 
@@ -208,6 +209,12 @@ def test_requantize_already_frozen_tree_rebuilds_fused():
     frozen_q = freeze_params(att.specs(), frozen_f, quantize="int8")
     assert frozen_q[FUSED_KEY]["wr"].dtype == jnp.int8
     assert "w_scale" in frozen_q[FUSED_KEY]
+    # the dtype contract over the whole tree (every group, fused included)
+    assert QuantizedTableDtypes("int8").check_params(frozen_q) == []
+    assert QuantizedTableDtypes("off").check_params(frozen_f) == []
+    # and cross-mode trees are rejected with a path-naming message
+    bad = QuantizedTableDtypes("off").check_params(frozen_q)
+    assert bad and "w_scale" in bad[0].message
     # matches quantizing the raw tree directly
     direct = freeze_params(att.specs(), params, quantize="int8")
     x = _rand((2, 3, 32), seed=1)
